@@ -1,0 +1,50 @@
+"""Paper Fig. 6/7 — algorithm classes × graph diameter regimes.
+
+The paper's central claim (P3): on high-diameter real web-crawls,
+data-driven sparse-worklist and non-vertex algorithms beat bulk-synchronous
+dense vertex programs; on low-diameter rmat/kron the ranking flips (e.g.
+direction-optimizing BFS wins).  We reproduce the full variant × graph
+matrix and report both wall time and the work-efficiency counter
+(edges touched), which is machine-independent.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import from_coo
+from repro.core.algorithms import bfs, cc, sssp
+from repro.graphs import generators as gen
+
+from .common import bench_graphs, row, time_call
+
+
+def run():
+    rows = []
+    for gname, (src, dst, n) in bench_graphs().items():
+        w = gen.random_weights(len(src), seed=3)
+        g = from_coo(src, dst, n, w, block_size=512, build_csc=True)
+        gsym = from_coo(src, dst, n, block_size=512, symmetrize=True)
+        source = int(np.argmax(np.bincount(src, minlength=n)))
+
+        for vname, fn in bfs.VARIANTS.items():
+            us = time_call(lambda: fn(g, source)[0])
+            _, stats = fn(g, source)
+            rows.append(row(
+                f"fig6/bfs/{gname}/{vname}", us,
+                f"rounds={stats.rounds};edges={stats.edges_touched}"))
+
+        for vname, fn in sssp.VARIANTS.items():
+            us = time_call(lambda: fn(g, source)[0])
+            _, stats = fn(g, source)
+            rows.append(row(
+                f"fig6/sssp/{gname}/{vname}", us,
+                f"rounds={stats.rounds};edges={stats.edges_touched}"))
+
+        for vname, fn in cc.VARIANTS.items():
+            us = time_call(lambda: fn(gsym)[0])
+            _, stats = fn(gsym)
+            rows.append(row(
+                f"fig6/cc/{gname}/{vname}", us,
+                f"rounds={stats.rounds};edges={stats.edges_touched}"))
+    return rows

@@ -1,0 +1,48 @@
+"""Shared benchmark utilities: timing, CSV rows, standard test graphs."""
+
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
+    """Median wall time in microseconds (blocks on jax outputs)."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append((time.perf_counter() - t0) * 1e6)
+    return float(np.median(ts))
+
+
+def row(name: str, us: float, derived: str = "") -> tuple:
+    return (name, us, derived)
+
+
+def print_rows(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+def bench_graphs(scale: str = "small"):
+    """The Table-3 contrast pair at benchmark scale: low-diameter rmat vs
+    high-diameter web-crawl-like."""
+    from repro.graphs import generators as gen
+
+    if scale == "small":
+        return {
+            "rmat": gen.rmat(10, 12, seed=1),
+            "web": gen.web_crawl_like(24, 5, 10, 2, seed=2),
+        }
+    return {
+        "rmat": gen.rmat(13, 16, seed=1),
+        "web": gen.web_crawl_like(64, 6, 12, 2, seed=2),
+    }

@@ -1,0 +1,66 @@
+"""Paper Fig. 8/9 — framework capability classes on one engine.
+
+We cannot run GraphIt/GAP/GBBS binaries here; instead the engine is
+restricted to each framework's documented capability class (the paper's own
+explanation of the performance gaps):
+
+  graphit-class : dense worklists, vertex programs only, direction-opt BFS,
+                  label-prop CC, no delta-stepping.
+  gap-class     : + delta-stepping SSSP (expert code), still dense worklists.
+  gbbs-class    : same operator set as gap on these benchmarks (dense
+                  bitmap frontiers, theory-efficient variants).
+  galois-class  : sparse worklists, asynchronous delta-stepping, non-vertex
+                  pointer-jumping CC, push-residual PR.
+
+All four classes run the same 7-benchmark suite the paper uses (bc, bfs,
+cc, kcore, pr, sssp, tc — tc/kcore/bc are class-independent here).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import from_coo
+from repro.core.algorithms import bc, bfs, cc, kcore, pagerank, sssp, tc
+from repro.graphs import generators as gen
+
+from .common import bench_graphs, row, time_call
+
+CLASSES = {
+    "graphit": dict(bfs=bfs.bfs_dirop, sssp=sssp.sssp_dd_dense,
+                    cc=cc.cc_labelprop, pr=pagerank.pr_pull),
+    "gap": dict(bfs=bfs.bfs_dirop, sssp=sssp.sssp_delta,
+                cc=cc.cc_pointer_jump, pr=pagerank.pr_pull),
+    "gbbs": dict(bfs=bfs.bfs_dd_dense, sssp=sssp.sssp_delta,
+                 cc=cc.cc_labelprop_sc, pr=pagerank.pr_pull),
+    "galois": dict(bfs=bfs.bfs_dd_sparse, sssp=sssp.sssp_delta,
+                   cc=cc.cc_pointer_jump, pr=pagerank.pr_push),
+}
+
+
+def run():
+    rows = []
+    src, dst, n = bench_graphs()["web"]
+    w = gen.random_weights(len(src), seed=3)
+    g = from_coo(src, dst, n, w, block_size=512, build_csc=True)
+    gsym = from_coo(src, dst, n, block_size=512, symmetrize=True, build_csc=True)
+    source = int(np.argmax(np.bincount(src, minlength=n)))
+
+    for cname, algs in CLASSES.items():
+        us = time_call(lambda: algs["bfs"](g, source)[0])
+        rows.append(row(f"fig8/bfs/{cname}", us, ""))
+        us = time_call(lambda: algs["sssp"](g, source)[0])
+        rows.append(row(f"fig8/sssp/{cname}", us, ""))
+        us = time_call(lambda: algs["cc"](gsym)[0])
+        rows.append(row(f"fig8/cc/{cname}", us, ""))
+        us = time_call(lambda: algs["pr"](gsym)[0])
+        rows.append(row(f"fig8/pr/{cname}", us, ""))
+
+    # class-independent benchmarks (same code in every framework class)
+    us = time_call(lambda: bc.bc_brandes(g, source)[0])
+    rows.append(row("fig8/bc/all", us, ""))
+    us = time_call(lambda: kcore.kcore_peel(gsym, 3)[0])
+    rows.append(row("fig8/kcore/all", us, ""))
+    us = time_call(lambda: tc.tc_count(gsym, edge_chunk=8192)[0])
+    rows.append(row("fig8/tc/all", us, ""))
+    return rows

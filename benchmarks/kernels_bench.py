@@ -1,0 +1,53 @@
+"""Kernel micro-benchmarks: µs/call (interpret-mode on CPU — correctness
+path; real perf comes from the dry-run roofline) + achieved-FLOP counts for
+the Pallas kernels vs their jnp oracles."""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.spmm_bsr.spmm_bsr import spmm_bsr, to_bsr
+from repro.kernels.embedding_bag.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+
+from .common import row, time_call
+
+RNG = np.random.default_rng(0)
+
+
+def run():
+    rows = []
+    # flash attention
+    bh, s, d = 2, 256, 64
+    q, k, v = (jnp.asarray(RNG.normal(size=(bh, s, d)), jnp.float32)
+               for _ in range(3))
+    us_k = time_call(lambda: flash_attention_bhsd(q, k, v, interpret=True))
+    us_r = time_call(lambda: attention_ref(q, k, v))
+    flops = 4 * bh * s * s * d
+    rows.append(row("kern/flash_attn_256", us_k,
+                    f"ref_us={us_r:.0f};flops={flops}"))
+
+    # spmm
+    n, m, f = 512, 4000, 128
+    src = RNG.integers(0, n, m); dst = RNG.integers(0, n, m)
+    w = RNG.normal(size=m).astype(np.float32)
+    idx, blocks = to_bsr(src, dst, w, n)
+    x = jnp.asarray(RNG.normal(size=(n, f)), jnp.float32)
+    us_k = time_call(lambda: spmm_bsr(idx, blocks, x, interpret=True))
+    nnzb = int((np.asarray(idx) >= 0).sum())
+    rows.append(row("kern/spmm_bsr_512", us_k,
+                    f"nnz_blocks={nnzb};mxu_flops={nnzb*2*128*128*f}"))
+
+    # embedding bag
+    b, l, vv, dd = 32, 10, 10_000, 128
+    ids = jnp.asarray(RNG.integers(0, vv, (b, l)), jnp.int32)
+    ws = jnp.ones((b, l), jnp.float32)
+    table = jnp.asarray(RNG.normal(size=(vv, dd)), jnp.float32)
+    us_k = time_call(lambda: embedding_bag(ids, ws, table, interpret=True))
+    us_r = time_call(lambda: embedding_bag_ref(ids, ws, table))
+    rows.append(row("kern/embedding_bag_32x10", us_k,
+                    f"ref_us={us_r:.0f};rows_gathered={b*l}"))
+    return rows

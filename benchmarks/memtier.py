@@ -1,0 +1,48 @@
+"""Paper Tables 1/2 — memory-tier bandwidth/latency model.
+
+The paper measures Optane PMM vs DRAM (Tables 1, 2) to ground its
+principles.  The TPU analogue is the HBM / VMEM / ICI tier stack; we report
+the published v5e tier constants (the roofline denominators) plus the tier
+*ratios* — the quantity the paper's reasoning actually uses (near-memory
+hit vs miss cost ≈ our VMEM-hit vs HBM-stream cost), and a measured
+host write-bandwidth point as the in-container proxy for Fig. 3's
+micro-benchmark sweep.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import row
+
+TIERS = {
+    # name: (bandwidth B/s, latency s, capacity bytes per chip)
+    "vmem": (22e12, 1e-8, 128 * 2**20),     # near tier ("DRAM cache")
+    "hbm": (819e9, 4e-7, 16 * 2**30),       # far tier ("Optane PMM")
+    "ici": (50e9, 1e-6, None),              # remote socket ("NUMA remote")
+    "dci": (25e9, 1e-5, None),              # cross-pod
+}
+
+
+def run():
+    rows = []
+    for name, (bw, lat, cap) in TIERS.items():
+        rows.append(row(
+            f"table1/{name}", lat * 1e6,
+            f"bw_gbps={bw/1e9:.0f};cap={cap if cap else 'n/a'}"))
+    # tier ratios — the paper's Table 1/2 argument in one number
+    rows.append(row("table2/near_over_far_bw", 0.0,
+                    f"ratio={TIERS['vmem'][0]/TIERS['hbm'][0]:.1f}"))
+    rows.append(row("table2/local_over_remote_bw", 0.0,
+                    f"ratio={TIERS['hbm'][0]/TIERS['ici'][0]:.1f}"))
+    # measured host write bandwidth (container proxy for the Fig. 3 sweep)
+    for mb in (64, 256):
+        buf = np.empty(mb * 2**20, dtype=np.uint8)
+        t0 = time.perf_counter()
+        buf[:] = 1
+        dt = time.perf_counter() - t0
+        rows.append(row(f"fig3/host_write_{mb}MB", dt * 1e6,
+                        f"gbps={mb / 1024 / dt:.1f}"))
+    return rows

@@ -1,0 +1,56 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (deliverable d).
+
+  memtier      Tables 1-2   memory-tier model + host write proxy
+  placement    Fig 3/§4.1   local/interleaved/blocked placement (8 devices)
+  granularity  Fig 4-5/§4.3 block-size ("page size") sweep + churn model
+  algo_classes Fig 6-7/§5   algorithm classes × diameter regimes
+  frameworks   Fig 8-9/§6.1 framework capability classes
+  scaling      Fig 10/§6.2  strong scaling over devices
+  vs_cluster   Fig 11/§6.3  single machine vs BSP cluster engine
+  kernels      —            Pallas kernel µs/call
+  roofline     §Roofline    reads experiments/dryrun/*.json
+"""
+
+import argparse
+import sys
+import traceback
+
+from . import (algo_classes, common, frameworks, granularity, kernels_bench,
+               memtier, placement, roofline, scaling, vs_cluster)
+
+SUITES = {
+    "memtier": memtier,
+    "placement": placement,
+    "granularity": granularity,
+    "algo_classes": algo_classes,
+    "frameworks": frameworks,
+    "scaling": scaling,
+    "vs_cluster": vs_cluster,
+    "kernels": kernels_bench,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", action="append", default=None,
+                    help="subset of suites (default: all)")
+    args = ap.parse_args()
+    names = args.suite or list(SUITES)
+    print("name,us_per_call,derived")
+    ok = True
+    for name in names:
+        try:
+            common.print_rows(SUITES[name].run())
+        except Exception:  # noqa: BLE001
+            ok = False
+            print(f"{name}/SUITE_ERROR,0.0,", file=sys.stdout)
+            traceback.print_exc()
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

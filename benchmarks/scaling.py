@@ -1,0 +1,64 @@
+"""Paper Fig. 10 — strong scaling (threads → devices).
+
+bfs/cc on 1/2/4/8 host devices with blocked placement.  On this 1-core
+container the wall-times cannot scale (all "devices" share the core) — the
+derived column therefore also reports per-device working-set bytes, the
+quantity whose scaling behaviour the paper's Fig. 10 turns on (near-memory
+fit), which IS meaningful here.
+"""
+
+from __future__ import annotations
+
+import subprocess
+import sys
+import textwrap
+
+from .common import row
+
+_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import time
+    import numpy as np
+    import jax
+
+    from repro.core import from_coo
+    from repro.core import placement as pl
+    from repro.core.algorithms import bfs
+    from repro.graphs import generators as gen
+
+    src, dst, n = gen.rmat(10, 12, seed=1)
+    g = from_coo(src, dst, n, block_size=512)
+    source = int(np.argmax(np.bincount(src, minlength=n)))
+    total_bytes = sum(a.size * a.dtype.itemsize
+                      for a in (g.col_idx, g.src_idx, g.edge_w))
+
+    for d in (1, 2, 4, 8):
+        mesh = jax.sharding.Mesh(np.array(jax.devices()[:d]).reshape(d),
+                                 ("data",))
+        gp = pl.place_graph(g, mesh, ("data",), "blocked")
+        bfs.bfs_dd_dense(gp, source)
+        t0 = time.perf_counter()
+        dist, _ = bfs.bfs_dd_dense(gp, source)
+        jax.block_until_ready(dist)
+        us = (time.perf_counter() - t0) * 1e6
+        print(f"ROW,fig10/bfs_dev{d},{us:.1f},"
+              f"bytes_per_dev={total_bytes//d}")
+""")
+
+
+def run():
+    rows = []
+    r = subprocess.run(
+        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
+        timeout=900,
+    )
+    for line in r.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, name, us, derived = line.split(",", 3)
+            rows.append(row(name, float(us), derived))
+    if not rows:
+        rows.append(row("fig10/ERROR", 0.0, r.stderr[-200:].replace(",", ";")))
+    return rows

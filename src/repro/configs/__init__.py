@@ -1,0 +1,1 @@
+from .registry import ARCHS, get_arch, make_dryrun_cell, list_cells  # noqa: F401

@@ -1,0 +1,209 @@
+"""Cell builders shared by the four GNN architectures.
+
+Shapes (assignment):
+  full_graph_sm — n=2,708 m=10,556 d_feat=1,433 (cora; full-batch node class.)
+  minibatch_lg  — n=232,965 m=114,615,892 batch_nodes=1,024 fanout 15-10
+                  (reddit-scale sampled training; d_feat=602, 41 classes)
+  ogb_products  — n=2,449,029 m=61,859,140 d_feat=100 (full-batch large, 47 cls)
+  molecule      — n=30 m=64 batch=128 (batched small graphs, energy regression)
+
+Equivariant archs (egnn/nequip/mace) receive positions on every shape
+(synthesised stand-ins on the citation-network shapes — the assignment pairs
+every arch with every shape, so the cell is defined this way; noted in
+DESIGN.md §Arch-applicability).  Message passing is segment_sum-based —
+JAX has no CSR SpMM, so the scatter pipeline IS the system (assignment note).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from ..graphs.sampler import sample_blocks_raw
+from ..models.gnn import common as C
+from ..optim import adamw_init, adamw_update
+from .registry import DryrunCell
+
+VERTEX = ("pod", "data", "model")   # flatten-all sharding for node/edge arrays
+BATCH = ("pod", "data")
+
+# explicit in_shardings require dims divisible by the mesh; node/edge arrays
+# are padded to this multiple (512 = full multi-pod mesh; also divides the
+# single-pod 256) with masked-out padding — the engine's sentinel-padding
+# pattern applied to the ML substrate.
+SHARD_MULT = 512
+
+
+def _ru(x: int, mult: int = SHARD_MULT) -> int:
+    return (x + mult - 1) // mult * mult
+
+GNN_SHAPE_TABLE = {
+    "full_graph_sm": dict(n=2708, m=10556, d_feat=1433, n_classes=7,
+                          kind="full", task="node_class"),
+    "minibatch_lg": dict(n=232_965, m=114_615_892, d_feat=602, n_classes=41,
+                         batch=1024, fanouts=(15, 10), kind="sampled",
+                         task="node_class"),
+    "ogb_products": dict(n=2_449_029, m=61_859_140, d_feat=100, n_classes=47,
+                         kind="full", task="node_class"),
+    "molecule": dict(n=30, m=64, batch=128, d_feat=16, n_classes=1,
+                     kind="molecule", task="graph_reg"),
+}
+
+
+def make_train_step(model_mod, cfg, lr: float = 1e-3):
+    def step(params, opt, batch: C.GNNBatch):
+        (loss, metrics), grads = jax.value_and_grad(
+            model_mod.loss_fn, has_aux=True
+        )(params, cfg, batch)
+        params, opt = adamw_update(grads, opt, params, lr, weight_decay=0.0)
+        return params, opt, metrics
+
+    return step
+
+
+def _param_specs(params_sds):
+    return jax.tree.map(lambda _: P(), params_sds)
+
+
+def build_gnn_cell(arch_id: str, shape: str, model_mod, cfg_for_shape,
+                   placement: str = "flat", **_opts) -> DryrunCell:
+    """placement (full-graph shapes):
+      'flat' — nodes/edges sharded over every mesh axis (default; combined
+               with the in-model pins + aggregation ordering this won §Perf
+               hillclimb A).
+      '2d'   — nodes over ('pod','data') × features over 'model' (CVC-style;
+               tried in hillclimb A4 and REFUTED — GSPMD resharding churn;
+               kept selectable for future partitioner versions).
+    """
+    info = GNN_SHAPE_TABLE[shape]
+    if placement == "2d" and info["kind"] == "full":
+        # pad the feature dim to the model-axis multiple (zero columns are
+        # mathematically inert; hardware-alignment padding)
+        info = dict(info, d_feat=_ru(info["d_feat"], 16))
+    cfg = cfg_for_shape(shape, info)
+    params_sds = jax.eval_shape(
+        partial(model_mod.init, cfg=cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    opt_sds = jax.eval_shape(adamw_init, params_sds)
+    pspecs = _param_specs(params_sds)
+    ospecs = jax.tree.map(lambda _: P(), opt_sds)
+    metric_specs = {"loss": P()}
+    step = make_train_step(model_mod, cfg)
+    kind = info["kind"]
+    f32, i32 = jnp.float32, jnp.int32
+
+    if kind in ("full",):
+        N, M = _ru(info["n"]), _ru(info["m"])
+
+        def fn(params, opt, feats, pos, src, dst, labels, node_mask, edge_mask):
+            batch = C.GNNBatch(
+                n_graphs=1, features=feats, positions=pos, src=src, dst=dst,
+                edge_mask=edge_mask,
+                graph_id=jnp.zeros((N,), i32),
+                node_mask=node_mask, labels=labels,
+            )
+            return step(params, opt, batch)
+
+        arg_specs = (
+            params_sds, opt_sds,
+            jax.ShapeDtypeStruct((N, info["d_feat"]), f32),
+            jax.ShapeDtypeStruct((N, 3), f32),
+            jax.ShapeDtypeStruct((M,), i32),
+            jax.ShapeDtypeStruct((M,), i32),
+            jax.ShapeDtypeStruct((N,), i32),
+            jax.ShapeDtypeStruct((N,), jnp.bool_),
+            jax.ShapeDtypeStruct((M,), jnp.bool_),
+        )
+        if placement == "flat":
+            in_specs = (
+                pspecs, ospecs,
+                P(VERTEX, None), P(VERTEX, None),
+                P(VERTEX), P(VERTEX), P(VERTEX), P(VERTEX), P(VERTEX),
+            )
+        else:  # 2d: CVC-style — edges over data axes × features over model;
+            # node-width arrays replicated (they are tiny next to edges)
+            in_specs = (
+                pspecs, ospecs,
+                P(None, "model"), P(),
+                P(BATCH), P(BATCH), P(), P(), P(BATCH),
+            )
+
+    elif kind == "sampled":
+        N, M = _ru(info["n"]), _ru(info["m"])
+        B, fanouts = info["batch"], info["fanouts"]
+
+        def fn(params, opt, row_ptr, col_idx, out_deg, feats, labels, seeds, key):
+            blocks = sample_blocks_raw(row_ptr, col_idx, out_deg, seeds, key, fanouts)
+            batch = C.blocks_to_batch(feats, labels, blocks, fanouts)
+            return step(params, opt, batch)
+
+        arg_specs = (
+            params_sds, opt_sds,
+            jax.ShapeDtypeStruct((_ru(N + 1),), i32),
+            jax.ShapeDtypeStruct((M,), i32),
+            jax.ShapeDtypeStruct((N,), i32),
+            jax.ShapeDtypeStruct((N, info["d_feat"]), f32),
+            jax.ShapeDtypeStruct((N,), i32),
+            jax.ShapeDtypeStruct((B,), i32),
+            jax.ShapeDtypeStruct((2,), jnp.uint32),
+        )
+        in_specs = (
+            pspecs, ospecs,
+            P(VERTEX), P(VERTEX), P(VERTEX),
+            P(VERTEX, None), P(VERTEX),
+            P(BATCH), P(),
+        )
+
+    else:  # molecule: batched small graphs, block-diagonal flatten
+        B, n, m = info["batch"], info["n"], info["m"]
+
+        def fn(params, opt, feats, pos, src, dst, labels):
+            batch = C.flatten_molecules(feats, pos, src, dst, labels)
+            return step(params, opt, batch)
+
+        arg_specs = (
+            params_sds, opt_sds,
+            jax.ShapeDtypeStruct((B, n, info["d_feat"]), f32),
+            jax.ShapeDtypeStruct((B, n, 3), f32),
+            jax.ShapeDtypeStruct((B, m), i32),
+            jax.ShapeDtypeStruct((B, m), i32),
+            jax.ShapeDtypeStruct((B,), f32),
+        )
+        in_specs = (
+            pspecs, ospecs,
+            P(BATCH, None, None), P(BATCH, None, None),
+            P(BATCH, None), P(BATCH, None), P(BATCH),
+        )
+
+    return DryrunCell(
+        arch=arch_id, shape=shape, kind="train",
+        fn=fn, arg_specs=arg_specs, in_specs=in_specs,
+        out_specs=(pspecs, ospecs, metric_specs),
+        donate=(0, 1),
+    )
+
+
+# ---------------------------------------------------------------------------
+# smoke helper: one molecule-style train step on a reduced config
+# ---------------------------------------------------------------------------
+
+def gnn_smoke(model_mod, cfg) -> dict:
+    rng = np.random.default_rng(0)
+    B, n, m, F = 4, 10, 20, cfg.d_feat
+    feats = rng.normal(size=(B, n, F)).astype(np.float32)
+    pos = rng.normal(size=(B, n, 3)).astype(np.float32)
+    src = rng.integers(0, n, (B, m))
+    dst = rng.integers(0, n, (B, m))
+    labels = rng.normal(size=(B,)).astype(np.float32)
+    batch = C.flatten_molecules(feats, pos, src, dst, labels)
+    params = model_mod.init(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    step = jax.jit(make_train_step(model_mod, cfg))
+    params, opt, metrics = step(params, opt, batch)
+    return {"loss": float(metrics["loss"]),
+            "finite": bool(jnp.isfinite(metrics["loss"]))}

@@ -1,0 +1,173 @@
+"""Cell builders shared by the five LM architectures.
+
+Shapes (assignment):
+  train_4k    — seq 4,096 × global_batch 256   → train_step
+  prefill_32k — seq 32,768 × global_batch 32   → serve prefill
+  decode_32k  — KV len 32,768 × global_batch 128 → serve decode (1 token)
+  long_500k   — KV len 524,288 × global_batch 1  → serve decode, KV cache
+                sharded along *sequence* (split-KV / flash-decoding layout,
+                since batch=1 cannot shard).  Decode cost is O(seq), so all
+                five archs run this cell; a 500k *prefill* would additionally
+                need sub-quadratic attention (only h2o-danube3's sliding
+                window qualifies) — see DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models import transformer as T
+from ..optim import adamw_init
+from .registry import DryrunCell
+
+BATCH_AXES = ("pod", "data")
+KEY_SPEC = jax.ShapeDtypeStruct((2,), jnp.uint32)
+
+SHAPE_TABLE = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode_longctx"),
+}
+
+
+def param_abstract(cfg: T.LMConfig):
+    return jax.eval_shape(partial(T.init, cfg=cfg), KEY_SPEC)
+
+
+def build_lm_cell(cfg: T.LMConfig, shape: str, unroll: bool = True,
+                  n_layers_override: int = None) -> DryrunCell:
+    info = SHAPE_TABLE[shape]
+    S, B = info["seq"], info["batch"]
+    kind = info["kind"]
+    # Roofline cells unroll the layer loop so cost_analysis / collective
+    # accounting reflects all L layers (XLA counts while bodies once — see
+    # LMConfig.scan_layers note).  The multi-pod compilability pass uses the
+    # production scanned lowering (unroll=False).  For very deep configs
+    # (qwen3 94L) the dry-run compiles 1- and 2-layer unrolled probes and
+    # extrapolates per-layer costs (n_layers_override) — see dryrun.py.
+    if unroll:
+        cfg = dataclasses.replace(cfg, scan_layers=False)
+    if n_layers_override is not None:
+        cfg = dataclasses.replace(cfg, n_layers=n_layers_override)
+
+    params_sds = param_abstract(cfg)
+    pspecs = T.param_specs(cfg, fsdp=True)
+
+    if kind == "train":
+        from ..optim.adamw import AdamWState
+
+        # §Perf: the ZeRO-3 gather schedule is a 2.3-3.6x win for dense LM
+        # training but regressed MoE training under every variant tried
+        # (full / experts-excluded / moe-block-excluded) — MoE trains keep
+        # GSPMD's own schedule.
+        if cfg.moe is not None:
+            cfg = dataclasses.replace(cfg, zero3_gather=False)
+
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        # optimizer moments shard exactly like their parameters (ZeRO)
+        opt_specs = AdamWState(step=P(), mu=pspecs, nu=pspecs)
+        batch_sds = {
+            "tokens": jax.ShapeDtypeStruct((B, S), jnp.int32),
+            "labels": jax.ShapeDtypeStruct((B, S), jnp.int32),
+        }
+        batch_specs = {
+            "tokens": P(BATCH_AXES, None),
+            "labels": P(BATCH_AXES, None),
+        }
+        step = T.make_train_step(cfg)
+        metric_specs = {"nll": P(), "aux": P(), "loss": P(), "lr": P()}
+        return DryrunCell(
+            arch=cfg.name, shape=shape, kind="train",
+            fn=step,
+            arg_specs=(params_sds, opt_sds, batch_sds),
+            in_specs=(pspecs, opt_specs, batch_specs),
+            out_specs=(pspecs, opt_specs, metric_specs),
+            donate=(0, 1),
+        )
+
+    if kind == "prefill":
+        # fwd-only: gathering expert stacks amortises over the long sequence
+        cfg = dataclasses.replace(cfg, gather_experts=True)
+        fn = T.make_prefill(cfg)
+        tok_sds = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        return DryrunCell(
+            arch=cfg.name, shape=shape, kind="serve",
+            fn=fn,
+            arg_specs=(params_sds, tok_sds),
+            in_specs=(pspecs, P(BATCH_AXES, None)),
+            out_specs=P(BATCH_AXES, None, "model"),
+            donate=(),
+        )
+
+    # decode kinds — serve layout: TP + 2D-sharded experts, no FSDP
+    # storage shards to gather per token; split-KV attention keeps the cache
+    # sequence-sharded (§Perf hillclimb C)
+    cfg = dataclasses.replace(
+        cfg,
+        decode_seq_axes=("data", "model") if kind == "decode_longctx"
+        else ("model",),
+    )
+    pspecs = T.param_specs_serve(cfg)
+    fn = T.make_decode(cfg)
+    cache_sds = T.cache_specs(cfg, B, S)
+    if kind == "decode_longctx":
+        # batch=1: shard the KV sequence dim over the whole mesh
+        # (split-KV / flash-decoding layout)
+        cache_specs = T.cache_pspec(None, ("data", "model"))
+        tok_spec = P(None, None)
+        logit_spec = P(None, None, "model")
+    else:
+        # batch over data axes AND sequence over 'model' — the KV cache is
+        # the dominant decode state (qwen3 @32k: 50 GB/device if only
+        # batch-sharded; 3.1 GB with the 2D layout) — §Perf hillclimb C
+        cache_specs = T.cache_pspec(BATCH_AXES, "model")
+        tok_spec = P(BATCH_AXES, None)
+        logit_spec = P(BATCH_AXES, None, "model")
+    tok_sds = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    pos_sds = jax.ShapeDtypeStruct((), jnp.int32)
+    note = ""
+    if kind == "decode_longctx":
+        note = ("decode is O(seq); 500k prefill would need sub-quadratic "
+                "attention (only danube3 SWA qualifies) — see DESIGN.md")
+    return DryrunCell(
+        arch=cfg.name, shape=shape, kind="serve",
+        fn=fn,
+        arg_specs=(params_sds, cache_sds, tok_sds, pos_sds),
+        in_specs=(pspecs, cache_specs, tok_spec, P()),
+        out_specs=(logit_spec, cache_specs),
+        donate=(1,),
+        note=note,
+    )
+
+
+# ---------------------------------------------------------------------------
+# smoke helper: reduced config, one CPU train step + one decode step
+# ---------------------------------------------------------------------------
+
+def lm_smoke(cfg: T.LMConfig) -> dict:
+    key = jax.random.PRNGKey(0)
+    params = T.init(key, cfg)
+    opt = adamw_init(params)
+    B, S = 2, 16
+    batch = {
+        "tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+    }
+    step = jax.jit(T.make_train_step(cfg))
+    params, opt, metrics = step(params, opt, batch)
+    cache = T.init_cache(cfg, B, 8)
+    logits, cache = jax.jit(T.make_decode(cfg))(
+        params, cache, batch["tokens"][:, :1], jnp.int32(0)
+    )
+    return {
+        "loss": float(metrics["loss"]),
+        "logits_shape": tuple(logits.shape),
+        "finite": bool(jnp.isfinite(metrics["loss"]))
+        and bool(jnp.all(jnp.isfinite(logits))),
+    }

@@ -1,0 +1,152 @@
+"""mind [recsys] — embed_dim=64, n_interests=4, capsule_iters=3,
+multi-interest dynamic routing.  [arXiv:1904.08030; unverified]
+
+Shapes:
+  train_batch    — batch 65,536 (in-batch sampled-softmax training)
+  serve_p99      — batch 512 online inference (interests + slate scoring)
+  serve_bulk     — batch 262,144 offline scoring
+  retrieval_cand — batch 1 vs 1,000,000 candidates (single batched matmul)
+
+The item-embedding table (2^23 rows × 64) is row-sharded over 'model'
+("interleaved" placement of the hot irregular-access structure — DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..models.recsys import mind as M
+from ..optim import adamw_init, adamw_update
+from .registry import ArchSpec, DryrunCell, register, RECSYS_SHAPES
+
+FULL = M.MINDConfig(name="mind", n_items=1 << 23, embed_dim=64, n_interests=4,
+                    capsule_iters=3, hist_len=50)
+SMOKE = M.MINDConfig(name="mind-smoke", n_items=512, embed_dim=16,
+                     n_interests=4, capsule_iters=3, hist_len=8)
+
+BATCH = ("pod", "data")
+TABLE = P("model", None)          # row-sharded embedding table
+CAND = ("data", "model")
+
+PARAM_SPECS = {"embed": TABLE, "bilinear": P(), "route_init": P()}
+
+SHAPES = {
+    "train_batch": dict(batch=65_536, kind="train"),
+    "serve_p99": dict(batch=512, kind="serve", slate=8192),
+    "serve_bulk": dict(batch=262_144, kind="serve", slate=8192),
+    "retrieval_cand": dict(batch=1, kind="retrieval", n_cands=1_000_000),
+}
+
+
+def make_train_step(cfg: M.MINDConfig, lr: float = 1e-3):
+    def step(params, opt, batch):
+        (loss, metrics), grads = jax.value_and_grad(M.loss_fn, has_aux=True)(
+            params, cfg, batch
+        )
+        params, opt = adamw_update(grads, opt, params, lr, weight_decay=0.0)
+        return params, opt, metrics
+
+    return step
+
+
+def build_cell(shape: str, **opts) -> DryrunCell:
+    cfg = FULL
+    info = SHAPES[shape]
+    B = info["batch"]
+    i32 = jnp.int32
+    params_sds = jax.eval_shape(
+        partial(M.init, cfg=cfg), jax.ShapeDtypeStruct((2,), jnp.uint32)
+    )
+    from ..optim.adamw import AdamWState
+
+    if info["kind"] == "train":
+        opt_sds = jax.eval_shape(adamw_init, params_sds)
+        opt_specs = AdamWState(step=P(), mu=PARAM_SPECS, nu=PARAM_SPECS)
+        batch_sds = {
+            "hist": jax.ShapeDtypeStruct((B, cfg.hist_len), i32),
+            "target": jax.ShapeDtypeStruct((B,), i32),
+        }
+        batch_specs = {"hist": P(BATCH, None), "target": P(BATCH)}
+        return DryrunCell(
+            arch="mind", shape=shape, kind="train",
+            fn=make_train_step(cfg),
+            arg_specs=(params_sds, opt_sds, batch_sds),
+            in_specs=(PARAM_SPECS, opt_specs, batch_specs),
+            out_specs=(PARAM_SPECS, opt_specs, {"loss": P()}),
+            donate=(0, 1),
+        )
+
+    if info["kind"] == "serve":
+        C = info["slate"]
+
+        def fn(params, hist, cand_ids):
+            return M.serve_scores(params, cfg, hist, cand_ids)
+
+        return DryrunCell(
+            arch="mind", shape=shape, kind="serve",
+            fn=fn,
+            arg_specs=(
+                params_sds,
+                jax.ShapeDtypeStruct((B, cfg.hist_len), i32),
+                jax.ShapeDtypeStruct((C,), i32),
+            ),
+            in_specs=(PARAM_SPECS, P(BATCH, None), P()),
+            out_specs=P(BATCH, None),
+        )
+
+    # retrieval: 1 user vs 1M candidates, candidates sharded.
+    # The slate is padded to a shard multiple; padding scores are masked so
+    # top-k semantics match the unpadded corpus.
+    NC = info["n_cands"]
+    NC_pad = (NC + 511) // 512 * 512
+
+    def fn(params, hist, cand_ids):
+        scores = M.serve_scores(params, cfg, hist, cand_ids)
+        valid = jnp.arange(NC_pad) < NC
+        scores = jnp.where(valid[None, :], scores, -jnp.inf)
+        vals, idx = jax.lax.top_k(scores, 100)
+        return vals, cand_ids[idx]
+
+    return DryrunCell(
+        arch="mind", shape=shape, kind="serve",
+        fn=fn,
+        arg_specs=(
+            params_sds,
+            jax.ShapeDtypeStruct((B, cfg.hist_len), i32),
+            jax.ShapeDtypeStruct((NC_pad,), i32),
+        ),
+        in_specs=(PARAM_SPECS, P(), P(CAND)),
+        out_specs=(P(), P()),
+    )
+
+
+def mind_smoke() -> dict:
+    cfg = SMOKE
+    key = jax.random.PRNGKey(0)
+    params = M.init(key, cfg)
+    opt = adamw_init(params)
+    batch = {
+        "hist": jax.random.randint(key, (8, cfg.hist_len), 0, cfg.n_items),
+        "target": jax.random.randint(key, (8,), 1, cfg.n_items),
+    }
+    step = jax.jit(make_train_step(cfg))
+    params, opt, metrics = step(params, opt, batch)
+    scores = M.serve_scores(params, cfg, batch["hist"], jnp.arange(64))
+    return {"loss": float(metrics["loss"]),
+            "finite": bool(jnp.isfinite(metrics["loss"]))
+            and bool(jnp.all(jnp.isfinite(scores)))}
+
+
+register(ArchSpec(
+    arch_id="mind",
+    family="recsys",
+    shapes=RECSYS_SHAPES,
+    build_cell=build_cell,
+    smoke_step=mind_smoke,
+    description=__doc__,
+))

@@ -1,0 +1,86 @@
+"""Architecture registry: 10 assigned archs × their shape sets = 40 cells.
+
+Each cell resolves to ``DryrunCell``: a step function + abstract input specs
+(ShapeDtypeStructs — never allocated) + PartitionSpec shardings, consumed by
+``launch/dryrun.py`` (lower + compile) and by the roofline benchmarks.
+Smoke tests use the reduced configs via ``smoke_step``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+
+LM_SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+GNN_SHAPES = ("full_graph_sm", "minibatch_lg", "ogb_products", "molecule")
+RECSYS_SHAPES = ("train_batch", "serve_p99", "serve_bulk", "retrieval_cand")
+
+
+@dataclasses.dataclass
+class DryrunCell:
+    arch: str
+    shape: str
+    kind: str                      # 'train' | 'serve'
+    fn: Callable                   # positional-args step function
+    arg_specs: tuple               # pytree of ShapeDtypeStruct per positional arg
+    in_specs: tuple                # pytree of PartitionSpec per positional arg
+    out_specs: object              # pytree of PartitionSpec (or None = replicated)
+    donate: Tuple[int, ...] = ()
+    note: str = ""
+
+
+@dataclasses.dataclass
+class ArchSpec:
+    arch_id: str
+    family: str                    # 'lm' | 'gnn' | 'recsys'
+    shapes: Tuple[str, ...]
+    build_cell: Callable[[str], DryrunCell]
+    smoke_step: Callable[[], dict]  # runs reduced config, returns metrics
+    description: str = ""
+
+
+ARCHS: Dict[str, ArchSpec] = {}
+
+
+def register(spec: ArchSpec):
+    ARCHS[spec.arch_id] = spec
+    return spec
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    _ensure_loaded()
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; have {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def list_cells():
+    _ensure_loaded()
+    return [(a, s) for a, spec in sorted(ARCHS.items()) for s in spec.shapes]
+
+
+def make_dryrun_cell(arch_id: str, shape: str, **opts) -> DryrunCell:
+    spec = get_arch(arch_id)
+    if shape not in spec.shapes:
+        raise KeyError(f"{arch_id} has shapes {spec.shapes}, not {shape!r}")
+    return spec.build_cell(shape, **opts)
+
+
+_LOADED = False
+
+
+def _ensure_loaded():
+    global _LOADED
+    if _LOADED:
+        return
+    _LOADED = True
+    from . import (  # noqa: F401
+        qwen3_moe_235b, deepseek_moe_16b, h2o_danube3_4b, stablelm_3b,
+        glm4_9b, nequip, mace, egnn, gcn_cora, mind,
+    )

@@ -1,0 +1,7 @@
+# The paper's primary contribution: a graph-analytics engine built on the
+# runtime principles (placement, granularity) and algorithmic principles
+# (sparse worklists, non-vertex operators, direction optimization) of
+# Gill et al., "Single Machine Graph Analytics on Massive Datasets Using
+# Intel Optane DC Persistent Memory" (2019) — adapted to TPU/JAX.
+from . import algorithms, engine, frontier, graph, operators  # noqa: F401
+from .graph import Graph, from_coo  # noqa: F401

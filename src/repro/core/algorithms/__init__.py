@@ -1,0 +1,1 @@
+from . import bfs, sssp, cc, pagerank, kcore, bc, tc  # noqa: F401

@@ -1,0 +1,134 @@
+"""Breadth-first search — the paper's four implementation classes.
+
+* ``bfs_topo``      topology-driven bulk-synchronous (Bellman-Ford-on-hops).
+* ``bfs_dd_dense``  data-driven, dense bitmap worklist (Ligra/GBBS class).
+* ``bfs_dd_sparse`` data-driven, sparse worklist via the capacity ladder
+                    (Galois class — the paper's winner on high-diameter crawls).
+* ``bfs_dirop``     direction-optimizing (Beamer) — wins on low-diameter
+                    rmat/kron, loses on crawls (paper Fig. 6).
+
+Distances are float32 (exact for any graph diameter we can hold).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import frontier as fr
+from .. import operators as ops
+from ..engine import SparseLadderEngine, RunStats, run_dense
+from ..graph import Graph
+
+INF = jnp.float32(jnp.finfo(jnp.float32).max)
+
+
+def _init_dist(g: Graph, src: int):
+    dist = g.vertex_full(INF, jnp.float32)
+    return dist.at[src].set(0.0)
+
+
+def bfs_topo(g: Graph, src: int, max_rounds: int = 100_000):
+    """Every round relaxes *all* edges (operator applied to every vertex)."""
+    dist0 = _init_dist(g, src)
+    all_active = g.valid_vertex_mask()
+
+    # BFS relaxes hops: message is dist[src] + 1.  We reuse the weighted relax
+    # with unit edge weights (builders set edge_w = 1 for unweighted graphs).
+    def step_correct(state):
+        dist, _ = state
+        new = ops.push_dense(
+            g, dist, all_active, dist, kind="min", use_weight=True
+        )
+        return new, jnp.any(new != dist)
+
+    rounds, (dist, _) = run_dense(
+        step_correct, (dist0, jnp.bool_(True)), lambda s: s[1], max_rounds
+    )
+    stats = RunStats(rounds=int(rounds), edges_touched=int(rounds) * g.m,
+                     dense_rounds=int(rounds))
+    return dist, stats
+
+
+def bfs_dd_dense(g: Graph, src: int, max_rounds: int = 100_000):
+    """Data-driven: only vertices whose label changed last round push."""
+    dist0 = _init_dist(g, src)
+    mask0 = fr.dense_from_indices(jnp.array([src]), g.n_pad).mask
+
+    def step(state):
+        dist, mask = state
+        new = ops.push_dense(g, dist, mask, dist, kind="min", use_weight=True)
+        return new, ops.updated_mask(dist, new)
+
+    rounds, (dist, _) = run_dense(
+        step, (dist0, mask0), lambda s: jnp.any(s[1]), max_rounds
+    )
+    stats = RunStats(rounds=int(rounds), edges_touched=int(rounds) * g.m,
+                     dense_rounds=int(rounds))
+    return dist, stats
+
+
+def _sparse_step(g, dist, mask, *, capacity: int, budget: int):
+    f = fr.compact(mask, capacity, g.sentinel)
+    batch = ops.advance_sparse(g, f, budget)
+    new = ops.relax_batch(batch, dist, dist, kind="min", use_weight=True)
+    return new, ops.updated_mask(dist, new)
+
+
+def _dense_step(g, dist, mask):
+    new = ops.push_dense(g, dist, mask, dist, kind="min", use_weight=True)
+    return new, ops.updated_mask(dist, new)
+
+
+def bfs_dd_sparse(g: Graph, src: int, max_rounds: int = 100_000):
+    """Data-driven over the sparse-worklist ladder (the paper's Galois class)."""
+    dist0 = _init_dist(g, src)
+    mask0 = fr.dense_from_indices(jnp.array([src]), g.n_pad).mask
+    eng = SparseLadderEngine(g, _sparse_step, _dense_step)
+    dist, _ = eng.run(dist0, mask0, max_rounds)
+    return dist, eng.stats
+
+
+def bfs_dirop(
+    g: Graph, src: int, max_rounds: int = 100_000, alpha: float = 14.0, beta: float = 24.0
+):
+    """Direction-optimizing BFS (needs CSC; doubles the graph footprint,
+    exactly the memory cost the paper attributes to this class)."""
+    assert g.has_csc
+    dist0 = _init_dist(g, src)
+    mask0 = fr.dense_from_indices(jnp.array([src]), g.n_pad).mask
+    total_edges = jnp.float32(g.m)
+
+    def step(state):
+        dist, mask, pull, visited_edges = state
+        fcount = jnp.sum(mask.astype(jnp.int32)).astype(jnp.float32)
+        fedges = jnp.sum(jnp.where(mask, g.out_deg, 0)).astype(jnp.float32)
+        unvisited = jnp.maximum(total_edges - visited_edges, 0.0)
+        pull = ops.direction_choice(g, fedges, unvisited, fcount, pull, alpha, beta)
+
+        def do_pull(_):
+            return ops.pull_dense(g, dist, mask, dist, kind="min", use_weight=True)
+
+        def do_push(_):
+            return ops.push_dense(g, dist, mask, dist, kind="min", use_weight=True)
+
+        new = jax.lax.cond(pull, do_pull, do_push, None)
+        return new, ops.updated_mask(dist, new), pull, visited_edges + fedges
+
+    rounds, (dist, _, _, _) = run_dense(
+        step,
+        (dist0, mask0, jnp.bool_(False), jnp.float32(0.0)),
+        lambda s: jnp.any(s[1]),
+        max_rounds,
+    )
+    stats = RunStats(rounds=int(rounds), edges_touched=int(rounds) * g.m,
+                     dense_rounds=int(rounds))
+    return dist, stats
+
+
+VARIANTS = {
+    "topo": bfs_topo,
+    "dd_dense": bfs_dd_dense,
+    "dd_sparse": bfs_dd_sparse,
+    "dirop": bfs_dirop,
+}

@@ -1,0 +1,75 @@
+"""Triangle counting by degree-ordered orientation + sorted intersection.
+
+Orientation sends each undirected edge {u,v} from the lower (deg, id) endpoint
+to the higher, so every triangle is counted exactly once and the oriented
+out-degree is O(sqrt(m)) on power-law graphs.  Each directed edge (u,v)
+intersects N+(u) with N+(v) by binary search over the padded, sorted oriented
+adjacency — an MXU-free, VPU-friendly formulation (the gather/searchsorted
+pattern is the same irregular-access shape the paper's P3 is about).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from ..engine import RunStats
+from ..graph import Graph
+
+
+def oriented_adjacency(g: Graph, pad_to_block: bool = True):
+    """Host-side: build (n_pad, dmax) sorted oriented adjacency (sentinel-padded)
+    plus the oriented edge list.  Graph must be symmetric."""
+    src = np.asarray(g.src_idx)[: g.m]
+    dst = np.asarray(g.col_idx)[: g.m]
+    deg = np.asarray(g.out_deg)
+    # rank = (degree, id) lexicographic
+    rank = deg.astype(np.int64) * (g.n_pad + 1) + np.arange(g.n_pad)
+    keep = rank[src] < rank[dst]
+    osrc, odst = src[keep], dst[keep]
+    odeg = np.bincount(osrc, minlength=g.n_pad)
+    dmax = max(int(odeg.max()), 1)
+    adj = np.full((g.n_pad, dmax), g.sentinel, dtype=np.int32)
+    order = np.lexsort((odst, osrc))
+    osrc, odst = osrc[order], odst[order]
+    starts = np.zeros(g.n_pad + 1, dtype=np.int64)
+    np.cumsum(odeg, out=starts[1:])
+    idx_in_row = np.arange(osrc.shape[0]) - starts[osrc]
+    adj[osrc, idx_in_row] = odst
+    adj.sort(axis=1)  # sentinel (large) sorts to the end; rows stay sorted
+    return jnp.asarray(adj), jnp.asarray(osrc), jnp.asarray(odst)
+
+
+def tc_count(g: Graph, edge_chunk: int = 32_768):
+    """Total triangle count. Returns (count, stats)."""
+    adj, osrc, odst = oriented_adjacency(g)
+    dmax = adj.shape[1]
+    ne = osrc.shape[0]
+    ne_pad = ((ne + edge_chunk - 1) // edge_chunk) * edge_chunk if ne else edge_chunk
+    pad = ne_pad - ne
+    osrc = jnp.pad(osrc, (0, pad), constant_values=g.sentinel)
+    odst = jnp.pad(odst, (0, pad), constant_values=g.sentinel)
+
+    @jax.jit
+    def count_chunk(s_chunk, d_chunk):
+        nu = adj[s_chunk]            # (chunk, dmax) candidates w in N+(u)
+        nv = adj[d_chunk]            # (chunk, dmax) sorted targets
+        pos = jax.vmap(jnp.searchsorted)(nv, nu)       # (chunk, dmax)
+        pos = jnp.clip(pos, 0, dmax - 1)
+        hit = jnp.take_along_axis(nv, pos, axis=1) == nu
+        hit &= nu != g.sentinel
+        return jnp.sum(hit.astype(jnp.int32))
+
+    total = 0  # python int accumulator — exact at any scale
+    for c in range(0, ne_pad, edge_chunk):
+        total = total + int(count_chunk(
+            jax.lax.dynamic_slice(osrc, (c,), (edge_chunk,)),
+            jax.lax.dynamic_slice(odst, (c,), (edge_chunk,)),
+        ))
+    stats = RunStats(rounds=max(ne_pad // edge_chunk, 1),
+                     edges_touched=int(ne_pad) * dmax)
+    return total, stats
+
+
+VARIANTS = {"orient_intersect": tc_count}

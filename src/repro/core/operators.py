@@ -1,0 +1,203 @@
+"""Edge relaxation operators: push, pull, and load-balanced sparse advance.
+
+These are the engine's "operator" layer in the paper's classification (§5.1):
+
+* ``push_dense``  — push-style operator applied to *all* edges, masked by an
+  active-source bitmap.  Cost O(m).  This is what topology-driven and
+  dense-worklist data-driven algorithms use.
+* ``pull_dense``  — pull-style operator over in-edges (CSC required).
+* ``advance_sparse`` — data-driven push from a compacted ``SparseFrontier``
+  with **merge-path load balancing**: the ``budget`` edge slots are assigned
+  to frontier vertices by binary search over the running degree sum, so a
+  3M-degree hub and a degree-1 leaf cost the same per-slot work (this is the
+  TPU/static-shape rendition of Galois's per-thread chunked worklists; on
+  GPUs the same trick is known from merge-based SpMV).  Cost O(budget).
+* ``direction_choice`` — Beamer's α/β heuristic for direction-optimizing
+  traversal, used by bfs_dirop (the paper's §5.2 comparison point).
+
+All reductions go through ``scatter_reduce`` (``.at[].min/max/add``) keyed by
+destination, or sorted ``segment_*`` ops in pull mode (CSC is sorted by
+destination, so ``indices_are_sorted=True``).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .frontier import DenseFrontier, SparseFrontier
+from .graph import Graph
+
+def neutral_for(kind: str, dtype) -> jax.Array:
+    """Identity element of the reduction, in the accumulator's dtype."""
+    dtype = jnp.dtype(dtype)
+    if kind == "add":
+        return jnp.zeros((), dtype)
+    if dtype == bool:
+        return jnp.array(kind == "min", dtype)
+    big = jnp.finfo(dtype).max if jnp.issubdtype(dtype, jnp.inexact) else jnp.iinfo(dtype).max
+    low = jnp.finfo(dtype).min if jnp.issubdtype(dtype, jnp.inexact) else jnp.iinfo(dtype).min
+    if kind == "min":
+        return jnp.array(big, dtype)
+    if kind == "max":
+        return jnp.array(low, dtype)
+    raise ValueError(kind)
+
+
+def scatter_reduce(dst, msg, out, kind: str):
+    """Reduce ``msg`` into ``out`` at positions ``dst``."""
+    ref = out.at[dst]
+    if kind == "min":
+        return ref.min(msg)
+    if kind == "max":
+        return ref.max(msg)
+    if kind == "add":
+        return ref.add(msg)
+    if kind == "or":
+        return ref.max(msg.astype(out.dtype)) if out.dtype != bool else ref.set(
+            jnp.logical_or(out[dst], msg)
+        )
+    raise ValueError(kind)
+
+
+def push_dense(
+    g: Graph,
+    src_val: jax.Array,
+    active: jax.Array,
+    out_init: jax.Array,
+    kind: str = "min",
+    use_weight: bool = True,
+) -> jax.Array:
+    """Relax every edge whose source is active.
+
+    ``src_val``: (n_pad,) value carried by each source vertex.
+    ``active``: (n_pad,) bool mask (sentinel must be False).
+    ``out_init``: (n_pad,) accumulator initial value.
+    Message is ``src_val[src] + w`` for min/max ("tropical" relax) and
+    ``src_val[src] * w`` for add (weighted contribution).
+    """
+    s, d, w = g.src_idx, g.col_idx, g.edge_w
+    v = src_val[s]
+    if kind in ("min", "max"):
+        msg = v + w if use_weight else v
+    else:
+        msg = v * w if use_weight else v
+    neutral = neutral_for(kind, out_init.dtype)
+    msg = jnp.where(active[s], msg.astype(out_init.dtype), neutral)
+    return scatter_reduce(d, msg, out_init, kind)
+
+
+def pull_dense(
+    g: Graph,
+    src_val: jax.Array,
+    active: jax.Array,
+    out_init: jax.Array,
+    kind: str = "min",
+    use_weight: bool = True,
+) -> jax.Array:
+    """Pull-style relax over in-edges: each vertex reduces over its
+    in-neighbours.  Requires CSC.  Uses sorted segment ops (in-edges are
+    grouped by destination)."""
+    assert g.has_csc, "pull_dense requires build_csc=True"
+    nbr = g.in_col_idx       # in-neighbour (source of the original edge)
+    dst = g.in_src_idx       # destination vertex, sorted ascending
+    w = g.in_edge_w
+    v = src_val[nbr]
+    if kind in ("min", "max"):
+        msg = v + w if use_weight else v
+    else:
+        msg = v * w if use_weight else v
+    neutral = neutral_for(kind, out_init.dtype)
+    msg = jnp.where(active[nbr], msg.astype(out_init.dtype), neutral)
+    seg = dict(
+        num_segments=g.n_pad, indices_are_sorted=True
+    )
+    if kind == "min":
+        red = jax.ops.segment_min(msg, dst, **seg)
+        return jnp.minimum(out_init, red)
+    if kind == "max":
+        red = jax.ops.segment_max(msg, dst, **seg)
+        return jnp.maximum(out_init, red)
+    if kind == "add":
+        red = jax.ops.segment_sum(msg, dst, **seg)
+        return out_init + red
+    raise ValueError(kind)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class EdgeBatch:
+    """Result of a sparse advance: ``budget`` edge slots."""
+
+    src: jax.Array     # (budget,) int32
+    dst: jax.Array     # (budget,) int32
+    w: jax.Array       # (budget,) float32
+    valid: jax.Array   # (budget,) bool
+    total: jax.Array   # () int32 — true number of frontier edges (overflow check)
+
+
+def advance_sparse(g: Graph, f: SparseFrontier, budget: int) -> EdgeBatch:
+    """Merge-path expansion of a sparse frontier into ≤ budget edge slots."""
+    cap = f.capacity
+    in_list = jnp.arange(cap) < jnp.minimum(f.count, cap)
+    deg = jnp.where(in_list, g.out_deg[f.idx], 0)
+    cum = jnp.cumsum(deg)
+    total = cum[-1] if cap > 0 else jnp.int32(0)
+    j = jnp.arange(budget, dtype=jnp.int32)
+    k = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+    k = jnp.clip(k, 0, cap - 1)
+    prev = jnp.where(k > 0, cum[jnp.maximum(k - 1, 0)], 0)
+    u = f.idx[k]
+    e = g.row_ptr[u] + (j - prev)
+    valid = j < total
+    e = jnp.where(valid, e, g.m_pad - 1)  # padded edge → sentinel dst, w=0
+    u = jnp.where(valid, u, g.sentinel)
+    return EdgeBatch(
+        src=u, dst=g.col_idx[e], w=g.edge_w[e], valid=valid, total=total
+    )
+
+
+def relax_batch(
+    batch: EdgeBatch,
+    src_val: jax.Array,
+    out_init: jax.Array,
+    kind: str = "min",
+    use_weight: bool = True,
+) -> jax.Array:
+    """Apply a relaxation over an EdgeBatch (sparse counterpart of push_dense)."""
+    v = src_val[batch.src]
+    if kind in ("min", "max"):
+        msg = v + batch.w if use_weight else v
+    else:
+        msg = v * batch.w if use_weight else v
+    neutral = neutral_for(kind, out_init.dtype)
+    msg = jnp.where(batch.valid, msg.astype(out_init.dtype), neutral)
+    return scatter_reduce(batch.dst, msg, out_init, kind)
+
+
+def direction_choice(
+    g: Graph,
+    frontier_edges: jax.Array,
+    unvisited_edges: jax.Array,
+    frontier_count: jax.Array,
+    currently_pull: jax.Array,
+    alpha: float = 14.0,
+    beta: float = 24.0,
+) -> jax.Array:
+    """Beamer's direction-optimizing heuristic.
+
+    Switch push→pull when the frontier's out-edge mass exceeds
+    ``unvisited_edges / alpha``; switch pull→push when the frontier shrinks
+    below ``n / beta`` vertices.  Returns True for "pull this round".
+    """
+    go_pull = frontier_edges > unvisited_edges / alpha
+    go_push = frontier_count < g.n / beta
+    return jnp.where(currently_pull, ~go_push, go_pull)
+
+
+def updated_mask(old: jax.Array, new: jax.Array) -> jax.Array:
+    m = new != old
+    return m.at[-1].set(False)  # sentinel never activates

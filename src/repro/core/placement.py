@@ -1,0 +1,123 @@
+"""Placement policies — the paper's §4 NUMA study, mapped to device meshes.
+
+The paper's three allocation policies become three ways of laying graph
+arrays out over the mesh:
+
+* ``local``       — everything on one device ("NUMA local"): the pathological
+                    baseline.  Fast-tier (single HBM) overflows first, exactly
+                    like 320 GB on one socket's 192 GB near-memory.
+* ``interleaved`` — blocks assigned round-robin across devices.  Implemented
+                    as a **block permutation** of the array followed by a
+                    contiguous shard: block b lives on device b mod D.
+                    Load-balances power-law skew; maximises aggregate
+                    fast-tier usage when only a subset of devices is active.
+* ``blocked``     — contiguous block ranges per device (the default for
+                    owner-computes graph partitions).  Fewest remote accesses
+                    when every device participates.
+
+Granularity (P2): placement never operates below ``Graph.block_size``
+elements — the huge-page analogue.  ``churn_cost`` models the paper's §4.2
+finding that OS-style dynamic migration is a net loss: re-placing arrays
+mid-run costs a full copy + recompilation, so the engine only re-places at
+checkpoint boundaries.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .graph import Graph
+
+Policy = Literal["local", "interleaved", "blocked"]
+
+
+def _num_devices(mesh: Mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def interleave_blocks(x: jax.Array, block_size: int, ndev: int) -> jax.Array:
+    """Permute blocks so contiguous sharding realises round-robin placement.
+
+    Block b of the original array ends up on device (b % ndev).
+    """
+    nb = x.shape[0] // block_size
+    if nb % ndev != 0:
+        return x  # cannot interleave evenly; fall back to blocked
+    blocks = x.reshape(nb, block_size, *x.shape[1:])
+    # new order: device-major [d0: blocks 0, D, 2D, ...][d1: blocks 1, D+1, ...]
+    order = np.arange(nb).reshape(nb // ndev, ndev).T.reshape(-1)
+    return blocks[order].reshape(x.shape)
+
+
+def sharding_for(mesh: Mesh, axes, policy: Policy) -> NamedSharding:
+    if policy == "local":
+        # one explicit device: realised as sharding over no axes (replicated)
+        # for SPMD programs; the microbenchmarks use device_put to device 0.
+        return NamedSharding(mesh, P())
+    return NamedSharding(mesh, P(axes))
+
+
+def place_array(
+    x: jax.Array, mesh: Mesh, axes, policy: Policy, block_size: int
+) -> jax.Array:
+    if policy == "interleaved":
+        x = interleave_blocks(x, block_size, _num_devices(mesh, axes))
+    return jax.device_put(x, sharding_for(mesh, axes, policy))
+
+
+def place_graph(g: Graph, mesh: Mesh, axes=("data",), policy: Policy = "blocked") -> Graph:
+    """Re-home every graph array under the given placement policy.
+
+    NOTE (P2/§4.2): this is a whole-array copy — the engine calls it once per
+    run, never inside the round loop (the "turn NUMA migration off" rule).
+    Interleaving permutes *edge blocks* only; vertex-indexed arrays must stay
+    in vertex order (they are the lookup side of gathers), so they are always
+    contiguously sharded.
+    """
+    bs = g.block_size
+    edge = lambda x: place_array(x, mesh, axes, policy, bs)
+    vert = lambda x: jax.device_put(
+        x, sharding_for(mesh, axes, "blocked" if policy != "local" else "local")
+    )
+    rep = dict(
+        row_ptr=vert(g.row_ptr),
+        col_idx=edge(g.col_idx),
+        src_idx=edge(g.src_idx),
+        edge_w=edge(g.edge_w),
+        out_deg=vert(g.out_deg),
+    )
+    if g.has_csc:
+        rep.update(
+            in_row_ptr=vert(g.in_row_ptr),
+            in_col_idx=edge(g.in_col_idx),
+            in_src_idx=edge(g.in_src_idx),
+            in_edge_w=edge(g.in_edge_w),
+            in_deg=vert(g.in_deg),
+        )
+    return dataclasses.replace(g, **rep)
+
+
+@dataclasses.dataclass
+class ChurnModel:
+    """Analytic model of mid-run re-placement (the paper's migration study).
+
+    Re-placing B bytes costs B/ici_bw seconds of copy plus one recompile of
+    the round step; amortised over R remaining rounds it is only worth it if
+    the per-round locality gain exceeds (copy + compile)/R — with measured
+    compile times in seconds and per-round gains in microseconds, it never
+    is.  This is the quantitative version of "turn migration off".
+    """
+
+    ici_bw: float = 50e9
+    compile_s: float = 2.0
+
+    def breakeven_rounds(self, bytes_moved: float, per_round_gain_s: float) -> float:
+        if per_round_gain_s <= 0:
+            return float("inf")
+        return (bytes_moved / self.ici_bw + self.compile_s) / per_round_gain_s

@@ -1,0 +1,1 @@
+from .pipeline import TokenPipeline, GraphBatchPipeline  # noqa: F401

@@ -1,0 +1,2 @@
+from .mesh_utils import axis_size, flat_devices, spec  # noqa: F401
+from .fault import StragglerMonitor, ElasticPolicy  # noqa: F401

@@ -1,0 +1,93 @@
+"""Host-level fault tolerance: stragglers, failures, elastic re-meshing.
+
+On a real fleet these run in the per-host launcher process (outside XLA).
+The policies are deliberately simple and testable:
+
+* ``StragglerMonitor`` — per-step wall-time watermarks.  A step slower than
+  ``threshold×`` the trailing median flags a straggler; after ``patience``
+  consecutive flags the launcher should trigger a checkpoint + re-mesh
+  (slow-host exclusion).  This is the single-program analogue of backup
+  tasks: on TPUs you cannot re-execute one shard, you must shrink the mesh.
+* ``ElasticPolicy`` — given the surviving device list, choose the largest
+  supported mesh shape ≤ available chips and report it; the trainer then
+  calls ``checkpoint.restore_resharded`` onto the new mesh.  Shapes are kept
+  to (pods × rows × cols) factorable forms so sharding specs stay valid.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+from typing import List, Optional, Sequence, Tuple
+
+
+@dataclasses.dataclass
+class StragglerMonitor:
+    threshold: float = 2.0
+    patience: int = 3
+    window: int = 32
+
+    def __post_init__(self):
+        self._times: List[float] = []
+        self._flags = 0
+        self._t0: Optional[float] = None
+
+    def step_start(self):
+        self._t0 = time.monotonic()
+
+    def step_end(self) -> bool:
+        """Record a step; returns True when a re-mesh should be triggered."""
+        assert self._t0 is not None
+        dt = time.monotonic() - self._t0
+        return self.observe(dt)
+
+    def observe(self, dt: float) -> bool:
+        self._times.append(dt)
+        self._times = self._times[-self.window:]
+        if len(self._times) < 8:
+            return False
+        med = statistics.median(self._times[:-1])
+        if dt > self.threshold * med:
+            self._flags += 1
+        else:
+            self._flags = 0
+        return self._flags >= self.patience
+
+
+@dataclasses.dataclass
+class ElasticPolicy:
+    """Pick the biggest valid mesh after losing chips."""
+
+    candidate_shapes: Sequence[Tuple[int, ...]] = (
+        (2, 16, 16), (16, 16), (16, 8), (8, 8), (8, 4), (4, 4), (2, 2), (1, 1),
+    )
+
+    def choose(self, available_chips: int) -> Tuple[int, ...]:
+        for shape in self.candidate_shapes:
+            size = 1
+            for s in shape:
+                size *= s
+            if size <= available_chips:
+                return shape
+        raise RuntimeError("no devices available")
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Transient-failure retry with exponential backoff (launcher level)."""
+
+    max_retries: int = 3
+    base_delay_s: float = 1.0
+
+    def run(self, fn, *args, **kwargs):
+        last = None
+        for attempt in range(self.max_retries + 1):
+            try:
+                return fn(*args, **kwargs)
+            except Exception as e:  # noqa: BLE001 — launcher boundary
+                last = e
+                if attempt == self.max_retries:
+                    raise
+                time.sleep(self.base_delay_s * (2 ** attempt))
+        raise last

@@ -1,0 +1,37 @@
+"""Small mesh/sharding helpers shared by launch + models."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def axis_size(mesh: Mesh, name: str) -> int:
+    return int(mesh.shape[name]) if name in mesh.shape else 1
+
+
+def flat_devices(mesh: Mesh):
+    return list(mesh.devices.flat)
+
+
+def spec(mesh: Mesh, *names) -> NamedSharding:
+    """NamedSharding with any axis not present in the mesh dropped."""
+    cleaned = tuple(
+        n if (n is None or _has(mesh, n)) else None for n in names
+    )
+    return NamedSharding(mesh, P(*cleaned))
+
+
+def _has(mesh: Mesh, n) -> bool:
+    if isinstance(n, (tuple, list)):
+        return all(_has(mesh, x) for x in n)
+    return n in mesh.shape
+
+
+def batch_axes(mesh: Mesh):
+    """Axes over which the global batch is sharded: ('pod','data') if the pod
+    axis exists, else ('data',)."""
+    return ("pod", "data") if "pod" in mesh.shape else ("data",)

@@ -1,0 +1,1 @@
+from . import generators  # noqa: F401

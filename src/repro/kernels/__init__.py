@@ -1,0 +1,6 @@
+# Pallas TPU kernels for the framework's compute hot-spots:
+#   flash_attention — blocked causal/SWA attention (LM archs)
+#   spmm_bsr        — block-sparse SpMM on the MXU (graph pull engine / GCN)
+#   embedding_bag   — scalar-prefetch gather + weighted reduce (recsys/MIND)
+# Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
+# interpret=True on CPU), ref.py (pure-jnp oracle used by tests).

@@ -1,0 +1,66 @@
+"""EmbeddingBag Pallas TPU kernel: weighted gather-reduce over a huge table.
+
+JAX has no native EmbeddingBag; this is the TPU-native one.  The bag ids are
+**scalar-prefetched** so each grid step's BlockSpec index_map DMAs exactly
+one table row-block from HBM — the table itself never moves.  Grid =
+(bags, bag_size) with the bag-slot dim innermost: the output row is
+revisited and accumulated in VMEM (sum / mean via weights).
+
+This is the same data-dependent-DMA pattern as the engine's sparse-frontier
+gather (DESIGN.md §4): the id list is a worklist, the table is the graph.
+Rows are padded to the 128-lane register width; a production TBE would batch
+multiple rows per DMA — noted as a perf iteration in EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _bag_kernel(ids_ref,        # scalar-prefetch (B, L) int32
+                w_ref,          # (1, L) per-sample weights
+                table_ref,      # (1, D) gathered row
+                o_ref,          # (1, D) output row (revisited over L)
+                *, bag: int):
+    b = pl.program_id(0)
+    l = pl.program_id(1)
+
+    @pl.when(l == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(ids_ref[b, l] >= 0)
+    def _acc():
+        o_ref[0] += (
+            table_ref[0].astype(jnp.float32) * w_ref[0, l].astype(jnp.float32)
+        ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def embedding_bag(ids, weights, table, *, interpret: bool = False):
+    """ids: (B, L) int32 (−1 = padding); weights: (B, L) float;
+    table: (V, D).  Returns (B, D) = Σ_l weights[b,l] · table[ids[b,l]]."""
+    B, L = ids.shape
+    V, D = table.shape
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, L),
+        in_specs=[
+            pl.BlockSpec((1, L), lambda b, l, ids: (b, 0)),
+            pl.BlockSpec((1, D), lambda b, l, ids: (jnp.maximum(ids[b, l], 0), 0)),
+        ],
+        out_specs=pl.BlockSpec((1, D), lambda b, l, ids: (b, 0)),
+        scratch_shapes=[],
+    )
+    return pl.pallas_call(
+        functools.partial(_bag_kernel, bag=L),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), table.dtype),
+        interpret=interpret,
+    )(ids, weights, table)

@@ -1,0 +1,31 @@
+"""Public wrapper with mean/sum modes and CPU interpret fallback."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .embedding_bag import embedding_bag as _kernel
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # noqa: BLE001
+        return False
+
+
+def embedding_bag(ids, table, weights=None, mode: str = "sum",
+                  interpret: Optional[bool] = None):
+    """ids (B, L) int32, −1 padding; table (V, D). mode ∈ {sum, mean}."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    if weights is None:
+        weights = jnp.ones(ids.shape, jnp.float32)
+    out = _kernel(ids, weights, table, interpret=interpret)
+    if mode == "mean":
+        cnt = jnp.sum(jnp.where(ids >= 0, weights, 0.0), axis=1, keepdims=True)
+        out = out / jnp.maximum(cnt, 1e-9)
+    return out

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for embedding_bag (take + masked weighted sum)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(ids, weights, table):
+    rows = table[jnp.maximum(ids, 0)]                    # (B, L, D)
+    w = jnp.where(ids >= 0, weights, 0.0)
+    return jnp.einsum("bl,bld->bd", w.astype(jnp.float32),
+                      rows.astype(jnp.float32)).astype(table.dtype)

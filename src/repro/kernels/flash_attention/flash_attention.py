@@ -1,0 +1,148 @@
+"""Blocked (flash) attention Pallas TPU kernel.
+
+TPU adaptation of the IO-aware attention idea (FlashAttention): tile Q along
+the grid, stream K/V blocks through VMEM with an online-softmax accumulator
+held in VMEM scratch, and never materialise the (S, S) score matrix in HBM.
+Block sizes default to MXU-aligned 128×128 tiles; the K-block loop is the
+innermost grid dimension so the output block is revisited (sequential TPU
+grid) and finalised on the last K step.
+
+Supports causal masking and sliding-window (SWA) masking — fully-masked
+K blocks are skipped (no MXU work), which is what makes SWA sub-quadratic
+in wall-clock as well as in theory.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fwd_kernel(
+    q_ref, k_ref, v_ref,          # VMEM blocks
+    o_ref,                        # output block
+    m_scr, l_scr, acc_scr,        # VMEM scratch: running max / denom / acc
+    *,
+    scale: float,
+    causal: bool,
+    window: Optional[int],
+    block_q: int,
+    block_k: int,
+    n_k_blocks: int,
+    seq_len: int,
+):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # ---- block-level skip: fully-masked K blocks do no MXU work
+    needed = True
+    if causal:
+        needed = k_start <= q_start + block_q - 1
+    if window is not None:
+        # K indices visible from this Q block: (q_start - window, q_end]
+        needed = jnp.logical_and(
+            needed, k_start + block_k - 1 > q_start - window
+        ) if causal else needed
+
+    @pl.when(needed if not isinstance(needed, bool) else True)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (block_q, d)
+        k = k_ref[0].astype(jnp.float32)              # (block_k, d)
+        v = v_ref[0].astype(jnp.float32)              # (block_k, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                      # (block_q, block_k)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        mask = kpos < seq_len
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= kpos > qpos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                            # (block_q, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(mask, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = corr * l_scr[...] + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = corr * acc_scr[...] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_scr[...] = m_new
+
+    @pl.when(ki == n_k_blocks - 1)
+    def _finalise():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "block_q", "block_k", "interpret"),
+)
+def flash_attention_bhsd(
+    q, k, v,
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    block_q: int = 128,
+    block_k: int = 128,
+    interpret: bool = False,
+):
+    """q/k/v: (BH, S, d) — flattened batch×heads. Returns (BH, S, d)."""
+    bh, s, d = q.shape
+    scale = 1.0 / math.sqrt(d)
+    s_pad = pl.cdiv(s, block_q) * block_q
+    if s_pad != s:
+        pad = [(0, 0), (0, s_pad - s), (0, 0)]
+        q = jnp.pad(q, pad)
+        k = jnp.pad(k, pad)
+        v = jnp.pad(v, pad)
+    n_q = s_pad // block_q
+    n_k = s_pad // block_k
+
+    kernel = functools.partial(
+        _fwd_kernel,
+        scale=scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, n_k_blocks=n_k, seq_len=s,
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid=(bh, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s_pad, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, 1), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :s, :]

@@ -1,0 +1,35 @@
+"""jit'd public wrapper: (B, S, H, d) layout used by the transformer."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .flash_attention import flash_attention_bhsd
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # noqa: BLE001
+        return False
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: Optional[bool] = None):
+    """q/k/v: (B, S, H, d) with H already expanded (GQA repeat done by caller).
+    interpret=None → auto (interpret mode off-TPU, compiled on TPU)."""
+    if interpret is None:
+        interpret = not _on_tpu()
+    B, S, H, d = q.shape
+    fold = lambda x: x.transpose(0, 2, 1, 3).reshape(B * H, S, d)
+    out = flash_attention_bhsd(
+        fold(q), fold(k), fold(v),
+        causal=causal, window=window,
+        block_q=block_q, block_k=block_k, interpret=interpret,
+    )
+    return out.reshape(B, H, S, d).transpose(0, 2, 1, 3)

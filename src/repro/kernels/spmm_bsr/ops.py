@@ -1,0 +1,31 @@
+"""Public wrapper: COO graph in, aggregated features out."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from .spmm_bsr import spmm_bsr, to_bsr
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:  # noqa: BLE001
+        return False
+
+
+class BsrMatrix:
+    """Preprocessed block-sparse adjacency (built once per graph — the
+    placement/granularity decision happens here, not per step)."""
+
+    def __init__(self, src, dst, w, n, bm: int = 128, bk: int = 128):
+        self.n = n
+        self.bm, self.bk = bm, bk
+        self.indices, self.blocks = to_bsr(src, dst, w, n, bm=bm, bk=bk)
+
+    def matmul(self, x, interpret: Optional[bool] = None):
+        if interpret is None:
+            interpret = not _on_tpu()
+        return spmm_bsr(self.indices, self.blocks, x, interpret=interpret)[: self.n]

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for spmm_bsr."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def spmm_ref(indices, blocks, x):
+    """Dense-per-block reference: same block-ELL inputs as the kernel."""
+    R, K, bm, bk = blocks.shape
+    F = x.shape[1]
+    xb = x.reshape(-1, bk, F)
+    out = jnp.zeros((R, bm, F), jnp.float32)
+    for r in range(R):
+        for j in range(K):
+            c = int(indices[r, j])
+            if c >= 0:
+                out = out.at[r].add(
+                    blocks[r, j].astype(jnp.float32) @ xb[c].astype(jnp.float32)
+                )
+    return out.reshape(R * bm, F).astype(x.dtype)
+
+
+def spmm_coo_ref(src, dst, w, n, x):
+    """Edge-list oracle: out[dst] += w * x[src] (matches to_bsr + spmm)."""
+    import jax
+
+    msg = x[src] * w[:, None]
+    out = jax.ops.segment_sum(msg, dst, num_segments=n)
+    pad = (x.shape[0] != n)
+    return out

@@ -1,0 +1,318 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes, print memory/cost analyses, and record roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch glm4-9b --shape train_4k
+    PYTHONPATH=src python -m repro.launch.dryrun --all            # single-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --all --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --list
+
+Outputs one JSON per cell under experiments/dryrun/ — consumed by
+benchmarks/roofline.py and EXPERIMENTS.md.
+"""
+
+import argparse   # noqa: E402
+import json       # noqa: E402
+import re         # noqa: E402
+import time       # noqa: E402
+import traceback  # noqa: E402
+
+import jax        # noqa: E402
+from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
+
+from .mesh import make_production_mesh  # noqa: E402
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# v5e hardware constants (per chip)
+PEAK_FLOPS = 197e12       # bf16
+HBM_BW = 819e9            # bytes/s
+ICI_BW = 50e9             # bytes/s/link (≈ aggregate per-chip useful: 4 links)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def filter_pspec(spec, mesh):
+    """Drop mesh axes that don't exist (e.g. 'pod' on the single-pod mesh)."""
+    names = set(mesh.shape)
+
+    def fix_entry(e):
+        if e is None:
+            return None
+        if isinstance(e, (tuple, list)):
+            kept = tuple(x for x in e if x in names)
+            return kept if kept else None
+        return e if e in names else None
+
+    return P(*[fix_entry(e) for e in spec])
+
+
+def to_shardings(tree, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, filter_pspec(s, mesh)),
+        tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def parse_collective_bytes(hlo_text: str) -> dict:
+    """Sum result-shape bytes of every collective op in the (SPMD, per-device)
+    HLO.  Result size ≈ operand size for all-reduce / all-to-all / permute;
+    for all-gather it is the post-gather size (upper bound on bytes moved),
+    for reduce-scatter the post-scatter size (lower bound).  Methodology
+    recorded in EXPERIMENTS.md §Roofline."""
+    totals = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    # e.g.:  %ar = bf16[4096,1536]{1,0} all-reduce(%x), replica_groups=...
+    pat = re.compile(
+        r"=\s+(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+(" +
+        "|".join(_COLLECTIVES) + r")[\( -]"
+    )
+    for m in pat.finditer(hlo_text):
+        dt, dims, op = m.group(1), m.group(2), m.group(3)
+        nbytes = _DTYPE_BYTES.get(dt, 4)
+        for d in dims.split(","):
+            if d:
+                nbytes *= int(d)
+        totals[op] += nbytes
+        counts[op] += 1
+    totals["total"] = sum(totals[k] for k in _COLLECTIVES)
+    return {"bytes": totals, "counts": counts}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, save: bool = True,
+             verbose: bool = True, unroll=None, cell=None, tag_extra="") -> dict:
+    from ..configs import make_dryrun_cell
+
+    # Roofline (single-pod) cells unroll the layer loop for correct cost
+    # accounting; the multi-pod compilability pass uses the production
+    # scanned lowering (fast compile, identical sharding structure).
+    if unroll is None:
+        unroll = not multi_pod
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.devices.size
+    if cell is None:
+        cell = make_dryrun_cell(arch, shape, unroll=unroll)
+
+    in_sh = tuple(to_shardings(s, mesh) for s in cell.in_specs)
+    out_sh = to_shardings(cell.out_specs, mesh)
+
+    t0 = time.time()
+    with mesh:
+        jitted = jax.jit(
+            cell.fn,
+            in_shardings=in_sh,
+            out_shardings=out_sh,
+            donate_argnums=cell.donate,
+        )
+        lowered = jitted.lower(*cell.arg_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = parse_collective_bytes(hlo)
+
+    flops = float(cost.get("flops", 0.0))
+    bytes_accessed = float(cost.get("bytes accessed", 0.0))
+    # cost_analysis is per-device (SPMD module). Roofline terms, in seconds:
+    t_compute = flops / PEAK_FLOPS
+    t_memory = bytes_accessed / HBM_BW
+    t_coll = coll["bytes"]["total"] / ICI_BW
+
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+
+    def _mem(name):
+        v = getattr(mem, name, None)
+        return int(v) if v is not None else None
+
+    record = {
+        "arch": arch,
+        "shape": shape,
+        "mesh": list(mesh.devices.shape),
+        "axes": list(mesh.shape.keys()),
+        "n_chips": int(n_chips),
+        "kind": cell.kind,
+        "unrolled": bool(unroll),
+        "note": cell.note,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "per_device": {
+            "flops": flops,
+            "bytes_accessed": bytes_accessed,
+            "collective_bytes": coll["bytes"],
+            "collective_counts": coll["counts"],
+            "argument_bytes": _mem("argument_size_in_bytes"),
+            "output_bytes": _mem("output_size_in_bytes"),
+            "temp_bytes": _mem("temp_size_in_bytes"),
+            "peak_bytes": _mem("peak_memory_in_bytes"),
+        },
+        "roofline": {
+            **{k: float(v) for k, v in terms.items()},
+            "bottleneck": bottleneck,
+        },
+    }
+
+    if verbose:
+        print(f"=== {arch} × {shape} on {record['mesh']} "
+              f"({'multi-pod' if multi_pod else 'single-pod'}) ===")
+        print(f"  lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print(f"  memory_analysis: args={record['per_device']['argument_bytes']}"
+              f" temp={record['per_device']['temp_bytes']}"
+              f" peak={record['per_device']['peak_bytes']}")
+        print(f"  cost_analysis: flops={flops:.3e} bytes={bytes_accessed:.3e}")
+        print(f"  collectives: {coll['bytes']['total']:.3e} B {coll['counts']}")
+        print(f"  roofline terms (s): compute={t_compute:.4e} "
+              f"memory={t_memory:.4e} collective={t_coll:.4e} "
+              f"→ bottleneck={bottleneck}")
+
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        tag = ("pod2" if multi_pod else "pod1") + tag_extra
+        path = os.path.join(OUT_DIR, f"{arch}__{shape}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+    return record
+
+
+def run_cell_extrapolated(arch: str, shape: str, multi_pod: bool = False,
+                          save: bool = True) -> dict:
+    """Roofline accounting for very deep LM configs whose fully-unrolled HLO
+    is impractical to compile on this 1-core container (qwen3: 94 layers).
+
+    Method: compile 1-layer and 2-layer *unrolled* probes → per-layer cost =
+    c2 − c1 (flops, bytes, collective bytes/counts; all layer-linear: remat,
+    optimizer update and MoE dispatch included); total = c1 + (L−1)·per-layer.
+    Memory analysis + the compile proof come from the full-depth *scanned*
+    lowering (identical sharding structure).  Recorded with
+    accounting="extrapolated".
+    """
+    from ..configs import get_arch
+    import importlib
+
+    mod = {
+        "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+        "deepseek-moe-16b": "deepseek_moe_16b",
+        "h2o-danube-3-4b": "h2o_danube3_4b",
+        "stablelm-3b": "stablelm_3b",
+        "glm4-9b": "glm4_9b",
+    }[arch]
+    cfg = importlib.import_module(f"repro.configs.{mod}").FULL
+    L = cfg.n_layers
+    from .mesh import make_production_mesh  # noqa: F401 (already imported)
+    from ..configs import make_dryrun_cell
+
+    print(f"--- extrapolated accounting for {arch} × {shape} (L={L})")
+    probes = {}
+    for nl in (1, 2):
+        cell = make_dryrun_cell(arch, shape, unroll=True,
+                                n_layers_override=nl)
+        probes[nl] = run_cell(arch, shape, multi_pod, save=False,
+                              verbose=False, unroll=True, cell=cell)
+        print(f"    probe L={nl}: flops={probes[nl]['per_device']['flops']:.3e} "
+              f"compile={probes[nl]['compile_s']}s")
+    # full-depth scanned compile: memory analysis + compilability proof
+    full = run_cell(arch, shape, multi_pod, save=False, verbose=False,
+                    unroll=False)
+    print(f"    full scanned compile: {full['compile_s']}s "
+          f"peak={full['per_device']['peak_bytes']}")
+
+    def combine(key):
+        c1 = probes[1]["per_device"][key]
+        c2 = probes[2]["per_device"][key]
+        if isinstance(c1, dict):
+            return {k: c1[k] + (L - 1) * (c2[k] - c1[k]) for k in c1}
+        if c1 is None or c2 is None:
+            return None
+        return c1 + (L - 1) * (c2 - c1)
+
+    rec = dict(full)
+    rec["unrolled"] = True
+    rec["accounting"] = "extrapolated(probe1,probe2,scanned-mem)"
+    pd = rec["per_device"]
+    for key in ("flops", "bytes_accessed", "collective_bytes",
+                "collective_counts"):
+        pd[key] = combine(key)
+    t_compute = pd["flops"] / PEAK_FLOPS
+    t_memory = pd["bytes_accessed"] / HBM_BW
+    t_coll = pd["collective_bytes"]["total"] / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    rec["roofline"] = {**{k: float(v) for k, v in terms.items()},
+                       "bottleneck": max(terms, key=terms.get)}
+    print(f"  roofline terms (s): compute={t_compute:.4e} "
+          f"memory={t_memory:.4e} collective={t_coll:.4e} "
+          f"→ bottleneck={rec['roofline']['bottleneck']}")
+    if save:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        tag = "pod2" if multi_pod else "pod1"
+        path = os.path.join(OUT_DIR, f"{arch}__{shape}__{tag}.json")
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1)
+    return rec
+
+
+# archs whose unrolled full-depth HLO is too large to compile on 1 CPU core
+EXTRAPOLATE = {"qwen3-moe-235b-a22b"}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--keep-going", action="store_true")
+    args = ap.parse_args()
+
+    from ..configs import list_cells
+
+    if args.list:
+        for a, s in list_cells():
+            print(f"{a:26s} {s}")
+        return
+
+    cells = (
+        list_cells() if args.all
+        else [(args.arch, args.shape)] if args.shape
+        else [(args.arch, s) for a, s in list_cells() if a == args.arch]
+    )
+    failures = []
+    for a, s in cells:
+        try:
+            if a in EXTRAPOLATE and not args.multi_pod:
+                run_cell_extrapolated(a, s, args.multi_pod)
+            else:
+                run_cell(a, s, args.multi_pod)
+        except Exception as e:  # noqa: BLE001
+            failures.append((a, s, repr(e)))
+            traceback.print_exc()
+            if not args.keep_going:
+                raise
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print(f"DRYRUN_OK ({len(cells)} cells, "
+          f"{'multi-pod' if args.multi_pod else 'single-pod'})")
+
+
+if __name__ == "__main__":
+    main()

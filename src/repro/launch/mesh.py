@@ -1,0 +1,38 @@
+"""Production meshes.
+
+Single pod: 256 chips as (16, 16) → ("data", "model").
+Multi-pod:  2 × 256   as (2, 16, 16) → ("pod", "data", "model"); the 'pod'
+axis crosses DCI (slower links) so shardings put only data-parallel traffic
+(gradient all-reduce, optionally compressed — optim/compression.py) on it.
+
+``make_production_mesh`` is a function — importing this module never touches
+jax device state (dryrun must set XLA_FLAGS before first jax init).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    size = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) == size:
+        return jax.make_mesh(shape, axes)
+    if len(devices) < size:
+        raise RuntimeError(
+            f"need {size} devices for mesh {shape}, found {len(devices)} — "
+            "run under XLA_FLAGS=--xla_force_host_platform_device_count=512"
+        )
+    dev = np.asarray(devices[:size]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)
+
+
+def make_host_mesh(shape, axes):
+    """Arbitrary test mesh over however many host devices exist."""
+    size = int(np.prod(shape))
+    dev = np.asarray(jax.devices()[:size]).reshape(shape)
+    return jax.sharding.Mesh(dev, axes)

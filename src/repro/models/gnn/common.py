@@ -1,0 +1,150 @@
+"""Shared GNN batch format + helpers.
+
+All four assigned GNN architectures consume one canonical ``GNNBatch``:
+a (possibly block-diagonal) flat graph.  Batched small graphs (the
+``molecule`` shape) are flattened with index offsets; sampled mini-batches
+(``minibatch_lg``) become layered child→parent edges; full-graph shapes pass
+through unchanged.  Message passing is ``gather → edge op → segment_sum`` —
+the engine's push-style operator applied to ML (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class GNNBatch:
+    n_graphs: int = dataclasses.field(metadata=dict(static=True))
+    features: jax.Array            # (N, F) float — or species one-hot input
+    positions: jax.Array           # (N, 3) float (zeros for non-geometric)
+    src: jax.Array                 # (M,) int32
+    dst: jax.Array                 # (M,) int32
+    edge_mask: jax.Array           # (M,) bool
+    graph_id: jax.Array            # (N,) int32
+    node_mask: jax.Array           # (N,) bool — nodes carrying loss
+    labels: jax.Array              # (N,) int32 node labels or (G,) float energies
+
+    @property
+    def n_nodes(self) -> int:
+        return self.features.shape[0]
+
+    @property
+    def n_edges(self) -> int:
+        return self.src.shape[0]
+
+
+def segment_mean(data, segment_ids, num_segments):
+    s = jax.ops.segment_sum(data, segment_ids, num_segments=num_segments)
+    c = jax.ops.segment_sum(jnp.ones_like(segment_ids, jnp.float32), segment_ids,
+                            num_segments=num_segments)
+    return s / jnp.maximum(c, 1.0)[..., None]
+
+
+def degrees(batch: GNNBatch) -> jax.Array:
+    ones = jnp.where(batch.edge_mask, 1.0, 0.0)
+    return jax.ops.segment_sum(ones, batch.dst, num_segments=batch.n_nodes)
+
+
+def mlp_init(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [
+        {
+            "w": jax.random.normal(k, (a, b), dtype) / jnp.sqrt(a).astype(dtype),
+            "b": jnp.zeros((b,), dtype),
+        }
+        for k, a, b in zip(ks, dims[:-1], dims[1:])
+    ]
+
+
+def mlp_apply(layers, x, act=jax.nn.silu, final_act=False):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i + 1 < len(layers) or final_act:
+            x = act(x)
+    return x
+
+
+def bessel_rbf(d, n_rbf: int, cutoff: float):
+    """Bessel radial basis with smooth polynomial cutoff (NequIP/DimeNet)."""
+    d = jnp.maximum(d, 1e-6)
+    n = jnp.arange(1, n_rbf + 1, dtype=d.dtype)
+    rb = jnp.sqrt(2.0 / cutoff) * jnp.sin(n * jnp.pi * d[..., None] / cutoff) / d[..., None]
+    x = jnp.clip(d / cutoff, 0.0, 1.0)
+    p = 6.0
+    env = 1.0 - (p + 1) * (p + 2) / 2 * x ** p + p * (p + 2) * x ** (p + 1) \
+        - p * (p + 1) / 2 * x ** (p + 2)
+    return rb * env[..., None]
+
+
+def node_class_loss(logits, batch: GNNBatch):
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), batch.labels[:, None].astype(jnp.int32), axis=-1
+    )[:, 0]
+    per = logz - gold
+    w = batch.node_mask.astype(jnp.float32)
+    return jnp.sum(per * w) / jnp.maximum(jnp.sum(w), 1.0)
+
+
+def energy_loss(energy, batch: GNNBatch):
+    tgt = batch.labels.astype(jnp.float32)[: energy.shape[0]]
+    return jnp.mean(jnp.square(energy - tgt))
+
+
+# ---------------------------------------------------------------------------
+# host-side batch builders
+# ---------------------------------------------------------------------------
+
+def flatten_molecules(feats, pos, src, dst, labels, edge_mask=None):
+    """(B, n, F), (B, n, 3), (B, m), (B, m), (B,) → block-diagonal GNNBatch."""
+    B, n, F = feats.shape
+    m = src.shape[1]
+    off = (np.arange(B) * n)[:, None]
+    em = np.ones((B, m), bool) if edge_mask is None else edge_mask
+    return GNNBatch(
+        n_graphs=B,
+        features=jnp.asarray(feats.reshape(B * n, F), jnp.float32),
+        positions=jnp.asarray(pos.reshape(B * n, 3), jnp.float32),
+        src=jnp.asarray((src + off).reshape(-1), jnp.int32),
+        dst=jnp.asarray((dst + off).reshape(-1), jnp.int32),
+        edge_mask=jnp.asarray(em.reshape(-1)),
+        graph_id=jnp.asarray(np.repeat(np.arange(B), n), jnp.int32),
+        node_mask=jnp.ones((B * n,), bool),
+        labels=jnp.asarray(labels, jnp.float32),
+    )
+
+
+def blocks_to_batch(features_table, labels_table, blocks, fanouts):
+    """Sampler output → layered GNNBatch (child→parent edges, seeds carry loss)."""
+    node_ids = [blocks.seeds] + list(blocks.layers)
+    sizes = [x.shape[0] for x in node_ids]
+    offsets = np.cumsum([0] + sizes[:-1])
+    all_ids = jnp.concatenate(node_ids)
+    srcs, dsts = [], []
+    for k, f in enumerate(fanouts):
+        parents = jnp.arange(sizes[k], dtype=jnp.int32) + int(offsets[k])
+        children = jnp.arange(sizes[k + 1], dtype=jnp.int32) + int(offsets[k + 1])
+        srcs.append(children)
+        dsts.append(jnp.repeat(parents, f))
+    src = jnp.concatenate(srcs)
+    dst = jnp.concatenate(dsts)
+    N = int(sum(sizes))
+    nm = jnp.zeros((N,), bool).at[: sizes[0]].set(True)
+    return GNNBatch(
+        n_graphs=1,
+        features=features_table[all_ids],
+        positions=jnp.zeros((N, 3), jnp.float32),
+        src=src,
+        dst=dst,
+        edge_mask=jnp.ones_like(src, bool),
+        graph_id=jnp.zeros((N,), jnp.int32),
+        node_mask=nm,
+        labels=labels_table[all_ids],
+    )

@@ -1,0 +1,115 @@
+"""GCN (Kipf & Welling) — symmetric-normalised SpMM message passing.
+
+Ã = D̂^{-1/2} (A + I) D̂^{-1/2};  H' = σ(Ã H W).
+
+The aggregation is the engine's pull-style operator; on TPU the hot path can
+route through the block-sparse SpMM Pallas kernel (kernels/spmm_bsr) when
+``use_kernel`` is set — the jnp path below is its oracle-equivalent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+
+
+@dataclasses.dataclass(frozen=True)
+class GCNConfig:
+    name: str = "gcn-cora"
+    n_layers: int = 2
+    d_hidden: int = 16
+    d_feat: int = 1433
+    n_classes: int = 7
+    dropout: float = 0.0   # eval-mode default; training uses rng-keyed dropout
+    task: str = "node_class"  # or "graph_reg"
+    # Activation-sharding pin (None = let GSPMD decide) — §Perf hillclimb A:
+    #   "rows": h sharded along nodes over ``pin_axes`` (stops GSPMD from
+    #           replicating the input feature matrix; edge-wide partial
+    #           all-reduces remain).
+    #   "cols": CVC-style 2D decomposition — h rows replicated, features
+    #           sharded over 'model', edges sharded over 'data'.  Gathers
+    #           become fully local; only (N, F/16) node-width slices are
+    #           ever all-reduced.
+    pin_mode: str = None
+    pin_axes: tuple = ("data", "model")
+    # cast the edge-message path to bf16 (halves collective + HBM bytes on
+    # the M-wide tensors; accumulation back in f32) — §Perf hillclimb A5
+    message_dtype: str = None
+
+
+def init(key, cfg: GCNConfig):
+    dims = [cfg.d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1) + [cfg.n_classes]
+    ks = jax.random.split(key, cfg.n_layers)
+    return {
+        "layers": [
+            {
+                "w": jax.random.normal(k, (a, b), jnp.float32) / jnp.sqrt(a),
+                "b": jnp.zeros((b,), jnp.float32),
+            }
+            for k, a, b in zip(ks, dims[:-1], dims[1:])
+        ]
+    }
+
+
+def _norm_coefs(batch: C.GNNBatch):
+    deg = C.degrees(batch) + 1.0  # +1 for the implicit self loop
+    inv_sqrt = jax.lax.rsqrt(deg)
+    return inv_sqrt, inv_sqrt[batch.src] * inv_sqrt[batch.dst]
+
+
+def apply(params, cfg: GCNConfig, batch: C.GNNBatch):
+    def pin(x):
+        if cfg.pin_mode is None:
+            return x
+        if cfg.pin_mode == "rows":
+            spec = jax.sharding.PartitionSpec(
+                cfg.pin_axes, *([None] * (x.ndim - 1)))
+        else:  # "cols"
+            if x.ndim < 2 or x.shape[-1] % 16 != 0:
+                return x
+            spec = jax.sharding.PartitionSpec(None, "model")
+        try:  # attempt-based guard -- see transformer._pin
+            return jax.lax.with_sharding_constraint(x, spec)
+        except (RuntimeError, ValueError):
+            return x
+
+    h = batch.features
+    inv_sqrt, edge_norm = _norm_coefs(batch)
+    edge_norm = jnp.where(batch.edge_mask, edge_norm, 0.0)
+
+    def aggregate(x):
+        """Â·x : symmetric-normalised aggregation + self loop."""
+        xm = x.astype(cfg.message_dtype) if cfg.message_dtype else x
+        msg = xm[batch.src] * edge_norm.astype(xm.dtype)[:, None]
+        agg = pin(jax.ops.segment_sum(msg, batch.dst, num_segments=batch.n_nodes))
+        return agg.astype(x.dtype) + x * (inv_sqrt ** 2)[:, None]
+
+    for i, layer in enumerate(params["layers"]):
+        d_in, d_out = layer["w"].shape
+        # Â(XW) ≡ (ÂX)W — aggregate in whichever width is narrower, so edge
+        # tensors (25× node count here) stay at min(d_in, d_out) width
+        # (§Perf hillclimb A, iteration A3)
+        if d_out <= d_in:
+            h = pin(aggregate(pin(h @ layer["w"]))) + layer["b"]
+        else:
+            h = pin(aggregate(h) @ layer["w"]) + layer["b"]
+        if i + 1 < len(params["layers"]):
+            h = jax.nn.relu(h)
+        h = pin(h)
+    if cfg.task == "graph_reg":
+        pooled = jax.ops.segment_sum(h, batch.graph_id, num_segments=batch.n_graphs)
+        return jnp.mean(pooled, axis=-1)  # (G,) scalar prediction
+    return h  # (N, n_classes)
+
+
+def loss_fn(params, cfg: GCNConfig, batch: C.GNNBatch):
+    out = apply(params, cfg, batch)
+    if cfg.task == "graph_reg":
+        loss = C.energy_loss(out, batch)
+    else:
+        loss = C.node_class_loss(out, batch)
+    return loss, {"loss": loss}

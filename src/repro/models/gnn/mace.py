@@ -1,0 +1,158 @@
+"""MACE (Batatia et al., arXiv:2206.07697) — higher-order equivariant message
+passing: per-edge A-features (one TP with SH) then node-wise symmetric tensor
+products up to correlation order 3 (the ACE product basis), per-layer energy
+readouts.  SO(3) variant, channel-wise contractions (see irreps.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from . import irreps as ir
+
+
+@dataclasses.dataclass(frozen=True)
+class MACEConfig:
+    name: str = "mace"
+    n_layers: int = 2
+    hidden_mul: int = 128
+    l_max: int = 2
+    correlation: int = 3
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat: int = 16
+    radial_hidden: int = 64
+    avg_degree: float = 8.0
+    task: str = "graph_reg"   # or "node_class"
+    n_classes: int = 7
+
+
+def _pair_paths(l_max: int):
+    """(l1, l2, l3) for node-wise feature ⊗ feature products."""
+    return ir.tp_paths(l_max)
+
+
+def node_tensor_product(f1: dict, f2: dict, w: jax.Array, l_max: int) -> dict:
+    """Channel-wise node TP: w (n_paths, mul)."""
+    out = {l: None for l in range(l_max + 1)}
+    dtype = next(iter(f1.values())).dtype
+    for pi, (l1, l2, l3) in enumerate(_pair_paths(l_max)):
+        cg = jnp.asarray(ir.cg_real(l1, l2, l3), dtype)
+        m = jnp.einsum("nui,nuj,ijk->nuk", f1[l1], f2[l2], cg)
+        m = m * w[pi][None, :, None]
+        out[l3] = m if out[l3] is None else out[l3] + m
+    return out
+
+
+def init(key, cfg: MACEConfig):
+    mul, lm = cfg.hidden_mul, cfg.l_max
+    n_edge_paths = len(ir.tp_paths(lm))
+    n_pair = len(_pair_paths(lm))
+    ks = jax.random.split(key, cfg.n_layers * 6 + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        k = ks[6 * i: 6 * i + 6]
+        mixes = jax.random.split(k[1], lm + 1)
+        selfs = jax.random.split(k[2], lm + 1)
+        msgs = jax.random.split(k[5], lm + 1)
+        layers.append(
+            {
+                "radial": C.mlp_init(k[0], [cfg.n_rbf, cfg.radial_hidden,
+                                            n_edge_paths * mul]),
+                "a_mix": {
+                    l: jax.random.normal(mixes[l], (mul, mul)) / jnp.sqrt(mul)
+                    for l in range(lm + 1)
+                },
+                "w2": jax.random.normal(k[3], (n_pair, mul)) / jnp.sqrt(mul),
+                "w3": jax.random.normal(k[4], (n_pair, mul)) / jnp.sqrt(mul),
+                "self": {
+                    l: jax.random.normal(selfs[l], (mul, mul)) / jnp.sqrt(mul)
+                    for l in range(lm + 1)
+                },
+                "msg_mix": {
+                    l: jax.random.normal(msgs[l], (3 * mul, mul)) / jnp.sqrt(3 * mul)
+                    for l in range(lm + 1)
+                },
+            }
+        )
+    out_dim = 1 if cfg.task == "graph_reg" else cfg.n_classes
+    return {
+        "embed": C.mlp_init(ks[-2], [cfg.d_feat, mul]),
+        "layers": layers,
+        "readouts": [
+            C.mlp_init(kk, [mul, mul // 2 or 1, out_dim])
+            for kk in jax.random.split(ks[-1], cfg.n_layers)
+        ],
+    }
+
+
+def apply(params, cfg: MACEConfig, batch: C.GNNBatch):
+    N, lm, mul = batch.n_nodes, cfg.l_max, cfg.hidden_mul
+    s, d = batch.src, batch.dst
+
+    h = ir.zeros_feat(lm, N, mul)
+    h[0] = C.mlp_apply(params["embed"], batch.features, final_act=True)[:, :, None]
+
+    rel = batch.positions[s] - batch.positions[d]
+    dist = jnp.linalg.norm(rel, axis=-1)
+    u = rel / jnp.maximum(dist, 1e-6)[:, None]
+    Y = ir.sph_all(lm, u)
+    rbf = C.bessel_rbf(dist, cfg.n_rbf, cfg.cutoff)
+    # degenerate edges (self loops / padding, dist→0) carry no direction:
+    # Y_l(0) is not covariant, so they must not message (NequIP/MACE use
+    # cutoff graphs without self edges)
+    em = (batch.edge_mask & (dist > 1e-6)).astype(jnp.float32)
+    n_edge_paths = len(ir.tp_paths(lm))
+    inv_deg = 1.0 / jnp.sqrt(cfg.avg_degree)
+
+    out_dim = 1 if cfg.task == "graph_reg" else cfg.n_classes
+    acc = (
+        jnp.zeros((batch.n_graphs,), jnp.float32)
+        if cfg.task == "graph_reg"
+        else jnp.zeros((N, out_dim), jnp.float32)
+    )
+    for li, lp in enumerate(params["layers"]):
+        # ---- A-features: aggregate one edge TP (ACE atomic basis)
+        rw = C.mlp_apply(lp["radial"], rbf).reshape(-1, n_edge_paths, mul)
+        rw = rw * em[:, None, None]
+        h_src = {l: h[l][s] for l in h}
+        msg = ir.edge_tensor_product(h_src, Y, rw, lm)
+        A = {
+            l: jax.ops.segment_sum(m, d, num_segments=N) * inv_deg
+            for l, m in msg.items()
+        }
+        A = ir.linear_mix(A, lp["a_mix"])
+        # ---- product basis: B2 = A⊗A, B3 = B2⊗A (correlation 3)
+        B2 = node_tensor_product(A, A, lp["w2"], lm)
+        parts = [A, B2]
+        if cfg.correlation >= 3:
+            B3 = node_tensor_product(B2, A, lp["w3"], lm)
+            parts.append(B3)
+        msg_cat = {
+            l: jnp.concatenate([p[l] for p in parts], axis=1) for l in A
+        }
+        mixed = ir.linear_mix(msg_cat, lp["msg_mix"])
+        selfc = ir.linear_mix(h, lp["self"])
+        h = ir.gate({l: mixed[l] + selfc[l] for l in mixed})
+        # ---- per-layer readout (MACE-style site energies)
+        out = C.mlp_apply(params["readouts"][li], h[0][:, :, 0])
+        if cfg.task == "graph_reg":
+            acc = acc + jax.ops.segment_sum(
+                out[:, 0], batch.graph_id, num_segments=batch.n_graphs
+            )
+        else:
+            acc = acc + out
+    return acc
+
+
+def loss_fn(params, cfg: MACEConfig, batch: C.GNNBatch):
+    out = apply(params, cfg, batch)
+    if cfg.task == "graph_reg":
+        loss = C.energy_loss(out, batch)
+    else:
+        loss = C.node_class_loss(out, batch)
+    return loss, {"loss": loss}

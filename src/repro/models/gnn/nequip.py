@@ -1,0 +1,113 @@
+"""NequIP (Batzner et al., arXiv:2101.03164) — E(3)-equivariant interatomic
+potential: per-edge spherical-harmonic tensor products with learned radial
+weights, aggregated with segment sums (SO(3) variant; see irreps.py).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from . import common as C
+from . import irreps as ir
+
+
+@dataclasses.dataclass(frozen=True)
+class NequIPConfig:
+    name: str = "nequip"
+    n_layers: int = 5
+    hidden_mul: int = 32
+    l_max: int = 2
+    n_rbf: int = 8
+    cutoff: float = 5.0
+    d_feat: int = 16
+    radial_hidden: int = 32
+    avg_degree: float = 8.0
+    task: str = "graph_reg"   # or "node_class"
+    n_classes: int = 7
+
+
+def _n_paths(l_max: int) -> int:
+    return len(ir.tp_paths(l_max))
+
+
+def init(key, cfg: NequIPConfig):
+    mul, lm = cfg.hidden_mul, cfg.l_max
+    n_paths = _n_paths(lm)
+    ks = jax.random.split(key, cfg.n_layers * 3 + 2)
+    layers = []
+    for i in range(cfg.n_layers):
+        k1, k2, k3 = ks[3 * i], ks[3 * i + 1], ks[3 * i + 2]
+        mixes = jax.random.split(k2, lm + 1)
+        selfs = jax.random.split(k3, lm + 1)
+        layers.append(
+            {
+                "radial": C.mlp_init(k1, [cfg.n_rbf, cfg.radial_hidden, n_paths * mul]),
+                "mix": {
+                    l: jax.random.normal(mixes[l], (mul, mul)) / jnp.sqrt(mul)
+                    for l in range(lm + 1)
+                },
+                "self": {
+                    l: jax.random.normal(selfs[l], (mul, mul)) / jnp.sqrt(mul)
+                    for l in range(lm + 1)
+                },
+            }
+        )
+    out_dim = 1 if cfg.task == "graph_reg" else cfg.n_classes
+    return {
+        "embed": C.mlp_init(ks[-2], [cfg.d_feat, mul]),
+        "layers": layers,
+        "readout": C.mlp_init(ks[-1], [mul, mul, out_dim]),
+    }
+
+
+def apply(params, cfg: NequIPConfig, batch: C.GNNBatch):
+    N, lm, mul = batch.n_nodes, cfg.l_max, cfg.hidden_mul
+    s, d = batch.src, batch.dst
+
+    h = ir.zeros_feat(lm, N, mul)
+    h[0] = C.mlp_apply(params["embed"], batch.features, final_act=True)[:, :, None]
+
+    rel = batch.positions[s] - batch.positions[d]
+    dist = jnp.linalg.norm(rel, axis=-1)
+    u = rel / jnp.maximum(dist, 1e-6)[:, None]
+    Y = ir.sph_all(lm, u)
+    rbf = C.bessel_rbf(dist, cfg.n_rbf, cfg.cutoff)
+    # degenerate edges (self loops / padding, dist→0) carry no direction:
+    # Y_l(0) is not covariant, so they must not message (NequIP/MACE use
+    # cutoff graphs without self edges)
+    em = (batch.edge_mask & (dist > 1e-6)).astype(jnp.float32)
+
+    n_paths = _n_paths(lm)
+    inv_deg = 1.0 / jnp.sqrt(cfg.avg_degree)
+    for lp in params["layers"]:
+        rw = C.mlp_apply(lp["radial"], rbf).reshape(-1, n_paths, mul)
+        rw = rw * em[:, None, None]
+        h_src = {l: h[l][s] for l in h}
+        msg = ir.edge_tensor_product(h_src, Y, rw, lm)
+        agg = {
+            l: jax.ops.segment_sum(m, d, num_segments=N) * inv_deg
+            for l, m in msg.items()
+        }
+        mixed = ir.linear_mix(agg, lp["mix"])
+        selfc = ir.linear_mix(h, lp["self"])
+        h = ir.gate({l: mixed[l] + selfc[l] for l in mixed})
+
+    scalars = h[0][:, :, 0]
+    out = C.mlp_apply(params["readout"], scalars)
+    if cfg.task == "graph_reg":
+        return jax.ops.segment_sum(
+            out[:, 0], batch.graph_id, num_segments=batch.n_graphs
+        )
+    return out  # (N, n_classes)
+
+
+def loss_fn(params, cfg: NequIPConfig, batch: C.GNNBatch):
+    out = apply(params, cfg, batch)
+    if cfg.task == "graph_reg":
+        loss = C.energy_loss(out, batch)
+    else:
+        loss = C.node_class_loss(out, batch)
+    return loss, {"loss": loss}

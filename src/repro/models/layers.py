@@ -1,0 +1,337 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (train +
+KV-cache decode, optional sliding window), SwiGLU, and sort-based MoE.
+
+Everything is pure JAX (init fns + apply fns over param dicts) so params
+shard transparently under pjit.  The MoE dispatch is the sort-based
+(MegaBlocks-style) formulation: O(T·k) scatter into per-expert capacity
+buffers — the framework's "sparse worklist" answer to irregular routing
+(DESIGN.md §4) — rather than the O(T·E·C) one-hot dispatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, dtype, scale: Optional[float] = None):
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    s = scale if scale is not None else 1.0 / jnp.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * s).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * w.astype(jnp.float32)).astype(x.dtype)
+
+
+def rope_tables(positions, d_head: int, theta: float = 1e4):
+    """positions: (..., S) int → cos/sin (..., S, d_head/2)."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, dh); cos/sin: (B, S, hh) or (S, hh)."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:
+        cos = cos[None, :, None, :]
+        sin = sin[None, :, None, :]
+    else:
+        cos = cos[:, :, None, :]
+        sin = sin[:, :, None, :]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1
+    ).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_head: int
+    rope_theta: float = 1e4
+    sliding_window: Optional[int] = None
+    qk_norm: bool = False
+    lean_softmax: bool = False  # §Perf hillclimb B1
+    # §Perf hillclimb C (flash-decoding split-KV): at decode the KV cache is
+    # the dominant state and is sharded along SEQUENCE over these axes; the
+    # per-token q / attention output (a few hundred KB) are replicated
+    # instead of head-sharded, so the cache never re-shards.  None = heads
+    # follow the weight sharding (training/prefill behaviour).
+    decode_seq_axes: Optional[tuple] = None
+
+
+def attn_init(key, cfg: AttnConfig, dtype):
+    ks = jax.random.split(key, 6)
+    p = {
+        "wq": dense_init(ks[0], (cfg.d_model, cfg.n_heads * cfg.d_head), dtype),
+        "wk": dense_init(ks[1], (cfg.d_model, cfg.n_kv_heads * cfg.d_head), dtype),
+        "wv": dense_init(ks[2], (cfg.d_model, cfg.n_kv_heads * cfg.d_head), dtype),
+        "wo": dense_init(ks[3], (cfg.n_heads * cfg.d_head, cfg.d_model), dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((cfg.d_head,), dtype)
+        p["k_norm"] = jnp.ones((cfg.d_head,), dtype)
+    return p
+
+
+def _expand_kv(k, n_heads: int):
+    """(B, S, KV, dh) → (B, S, H, dh) by repeating each kv head H/KV times."""
+    kv = k.shape[2]
+    rep = n_heads // kv
+    return jnp.repeat(k, rep, axis=2)
+
+
+def _causal_mask(sq: int, sk: int, window: Optional[int], q_offset=0):
+    qi = jnp.arange(sq)[:, None] + q_offset
+    ki = jnp.arange(sk)[None, :]
+    mask = ki <= qi
+    if window is not None:
+        mask &= ki > qi - window
+    return mask  # (sq, sk)
+
+
+def attention(p, cfg: AttnConfig, x, positions, *, use_pallas: bool = False):
+    """Full (training / prefill) attention. x: (B, S, D) → (B, S, D)."""
+    B, S, D = x.shape
+    q = (x @ p["wq"]).reshape(B, S, cfg.n_heads, cfg.d_head)
+    k = (x @ p["wk"]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ p["wv"]).reshape(B, S, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    cos, sin = rope_tables(positions, cfg.d_head, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    k = _expand_kv(k, cfg.n_heads)
+    v = _expand_kv(v, cfg.n_heads)
+    if use_pallas:
+        from ..kernels.flash_attention.ops import flash_attention
+        out = flash_attention(q, k, v, causal=True, window=cfg.sliding_window)
+    elif cfg.lean_softmax:
+        # §Perf hillclimb B1': every (S, S)-sized tensor stays in the model
+        # dtype (bf16) — additive mask, bf16 max-sub-exp, f32 row-sum only on
+        # the (S,)-reduction, unnormalised AV then divide on (S, dh).
+        scale = jnp.asarray(1.0 / jnp.sqrt(cfg.d_head), x.dtype)
+        logits = jnp.einsum(
+            "bqhd,bkhd->bhqk", q, k, preferred_element_type=x.dtype
+        ) * scale
+        addmask = jnp.where(
+            _causal_mask(S, S, cfg.sliding_window), 0.0, -1e30
+        ).astype(x.dtype)
+        logits = logits + addmask[None, None]
+        m = jnp.max(logits, axis=-1, keepdims=True)
+        probs = jnp.exp(logits - m)                          # bf16 (S,S)
+        denom = jnp.sum(probs, axis=-1, dtype=jnp.float32)   # f32 accum, (B,H,S)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+        inv = (1.0 / jnp.maximum(denom, 1e-30)).astype(x.dtype)
+        out = out * inv.transpose(0, 2, 1)[..., None]        # (B,S,H,1)
+    else:
+        scale = 1.0 / jnp.sqrt(cfg.d_head).astype(jnp.float32)
+        logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+        mask = _causal_mask(S, S, cfg.sliding_window)
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+        out = jnp.einsum("bhqk,bkhd->bqhd", probs, v)
+    out = out.reshape(B, S, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"]
+
+
+def _pin_l(x, spec):
+    # attempt-based guard -- see transformer._pin for why not get_abstract_mesh
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (RuntimeError, ValueError):
+        return x
+
+
+def attention_decode(p, cfg: AttnConfig, x, cache_k, cache_v, pos,
+                     slot_mask=None):
+    """One-token decode. x: (B, 1, D); cache_[kv]: (B, S_max, KV, dh).
+
+    ``pos``: () int32 — one shared write position (fast path, used by the
+    dry-run cells), or (B,) int32 — per-slot positions for continuous
+    batching with ragged sequences. ``slot_mask`` (B,) optionally disables
+    cache writes for parked slots (scheduler admits/prefills one request
+    while others hold position).
+    Returns (out (B, 1, D), new_cache_k, new_cache_v)."""
+    from jax.sharding import PartitionSpec as PS
+
+    B, _, D = x.shape
+    S_max = cache_k.shape[1]
+    q = (x @ p["wq"]).reshape(B, 1, cfg.n_heads, cfg.d_head)
+    k = (x @ p["wk"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+    v = (x @ p["wv"]).reshape(B, 1, cfg.n_kv_heads, cfg.d_head)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"])
+        k = rmsnorm(k, p["k_norm"])
+    pos = jnp.asarray(pos, jnp.int32)
+    per_slot = pos.ndim == 1
+    posv = (pos[:, None] if per_slot
+            else jnp.full((B, 1), pos, jnp.int32))
+    cos, sin = rope_tables(posv, cfg.d_head, cfg.rope_theta)
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    if per_slot:
+        write = jnp.arange(S_max)[None, :] == posv          # (B, S)
+        if slot_mask is not None:
+            write &= slot_mask[:, None]
+        cache_k = jnp.where(write[:, :, None, None],
+                            k.astype(cache_k.dtype), cache_k)
+        cache_v = jnp.where(write[:, :, None, None],
+                            v.astype(cache_v.dtype), cache_v)
+    else:
+        cache_k = jax.lax.dynamic_update_slice(
+            cache_k, k.astype(cache_k.dtype), (0, pos, 0, 0)
+        )
+        cache_v = jax.lax.dynamic_update_slice(
+            cache_v, v.astype(cache_v.dtype), (0, pos, 0, 0)
+        )
+    scale = 1.0 / jnp.sqrt(cfg.d_head).astype(jnp.float32)
+    G = cfg.n_heads // cfg.n_kv_heads
+    if cfg.decode_seq_axes is not None:
+        # §Perf hillclimb C: split-KV decode.  The cache stays sequence-
+        # sharded; q (a few hundred KB) is replicated; GQA is computed with
+        # grouped einsums against the cache directly (no head-expand, so
+        # nothing ever forces the multi-GB cache to re-shard).  The softmax
+        # and AV contraction over the sharded sequence lower to tiny
+        # all-reduces (flash-decoding's split-K combine).
+        U = PS.UNCONSTRAINED
+        seq_spec = PS(U, cfg.decode_seq_axes, None, None)
+        cache_k = _pin_l(cache_k, seq_spec)
+        cache_v = _pin_l(cache_v, seq_spec)
+        q = _pin_l(q, PS(U, None, None, None))
+    qg = q.reshape(B, 1, cfg.n_kv_heads, G, cfg.d_head)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, cache_k)
+    logits = logits.astype(jnp.float32) * scale      # (B, KV, G, 1, S)
+    ki = jnp.arange(S_max)[None, None, None, None, :]
+    pb = posv[:, 0][:, None, None, None, None] if per_slot else pos
+    valid = ki <= pb
+    if cfg.sliding_window is not None:
+        valid &= ki > pb - cfg.sliding_window
+    logits = jnp.where(valid, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, cache_v)
+    out = out.reshape(B, 1, cfg.n_heads * cfg.d_head)
+    return out @ p["wo"], cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# feed-forward: dense SwiGLU and sort-based MoE
+# ---------------------------------------------------------------------------
+
+def swiglu_init(key, d_model: int, d_ff: int, dtype):
+    ks = jax.random.split(key, 3)
+    return {
+        "wi_gate": dense_init(ks[0], (d_model, d_ff), dtype),
+        "wi_up": dense_init(ks[1], (d_model, d_ff), dtype),
+        "wo": dense_init(ks[2], (d_ff, d_model), dtype),
+    }
+
+
+def swiglu(p, x):
+    return (jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])) @ p["wo"]
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_expert: int
+    n_shared: int = 0
+    d_shared: int = 0
+    capacity_factor: float = 1.25
+    router_aux_weight: float = 0.01
+
+
+def moe_init(key, d_model: int, cfg: MoEConfig, dtype):
+    ks = jax.random.split(key, 5)
+    E, F = cfg.n_experts, cfg.d_expert
+    p = {
+        "router": dense_init(ks[0], (d_model, E), jnp.float32),
+        "we_gate": dense_init(ks[1], (E, d_model, F), dtype),
+        "we_up": dense_init(ks[2], (E, d_model, F), dtype),
+        "we_down": dense_init(ks[3], (E, F, d_model), dtype),
+    }
+    if cfg.n_shared:
+        p["shared"] = swiglu_init(ks[4], d_model, cfg.d_shared * cfg.n_shared, dtype)
+    return p
+
+
+def moe_block(p, cfg: MoEConfig, x, *, ep_axis: Optional[str] = None):
+    """Sort-based top-k MoE. x: (B, S, D) → (B, S, D), plus aux loss.
+
+    Dispatch: flatten (token, k) assignments, sort by expert, take the first
+    ``capacity`` slots per expert (drop overflow — tokens keep the shared/
+    residual path), run batched expert GEMMs, scatter back with router
+    weights.  With the expert dim sharded over ``ep_axis`` under pjit the
+    scatter/gather lowers to the MoE all-to-all.
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.n_experts, cfg.top_k
+    xt = x.reshape(T, D)
+
+    logits = (xt.astype(jnp.float32)) @ p["router"]          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(probs, K)                     # (T, K)
+    topw = topw / jnp.sum(topw, axis=-1, keepdims=True)      # renormalise
+
+    # ---- load-balancing auxiliary loss (Switch-style)
+    me = jnp.mean(jax.nn.one_hot(tope[:, 0], E, dtype=jnp.float32), axis=0)
+    ce = jnp.mean(probs, axis=0)
+    aux = cfg.router_aux_weight * E * jnp.sum(me * ce)
+
+    # ---- sort-based dispatch
+    cap = int(cfg.capacity_factor * T * K / E) + 1
+    flat_e = tope.reshape(T * K)
+    flat_t = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    flat_w = topw.reshape(T * K)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st, sw = flat_e[order], flat_t[order], flat_w[order]
+    # position of each sorted slot within its expert group
+    start = jnp.searchsorted(se, jnp.arange(E), side="left")
+    pos_in_e = jnp.arange(T * K) - start[se]
+    keep = pos_in_e < cap
+    slot = jnp.where(keep, se * cap + pos_in_e, E * cap)     # overflow → trash row
+
+    buf = jnp.zeros((E * cap + 1, D), x.dtype).at[slot].set(xt[st])
+    buf = buf[: E * cap].reshape(E, cap, D)
+    if ep_axis is not None:
+        buf = jax.lax.with_sharding_constraint(
+            buf, jax.sharding.PartitionSpec(ep_axis, None, None)
+        )
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, p["we_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", buf, p["we_up"])
+    out_e = jnp.einsum("ecf,efd->ecd", h, p["we_down"])      # (E, cap, D)
+    out_flat = out_e.reshape(E * cap, D)
+
+    gathered = out_flat[jnp.minimum(slot, E * cap - 1)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    out = jnp.zeros((T, D), x.dtype).at[st].add(gathered * sw[:, None].astype(x.dtype))
+
+    if "shared" in p:
+        out = out + swiglu(p["shared"], xt)
+    return out.reshape(B, S, D), aux

@@ -1,0 +1,111 @@
+"""MIND — Multi-Interest Network with Dynamic (B2I capsule) routing
+[arXiv:1904.08030].
+
+Hot path: the item-embedding gather over a 10⁶–10⁹-row table — the same
+irregular-access primitive as the engine's frontier gather (DESIGN.md §4).
+The table is row-sharded over the 'model' axis in production; lookups become
+all-to-all gathers under GSPMD (or the embedding_bag Pallas kernel on TPU).
+
+* Training: label-aware attention over interests + in-batch sampled softmax.
+* Serving:  interests (B, K, d) then max-over-interest dot scoring.
+* Retrieval: one user vs 10⁶ candidates — a single (K, d) × (d, C) matmul,
+  never a loop.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MINDConfig:
+    name: str = "mind"
+    n_items: int = 1 << 23
+    embed_dim: int = 64
+    n_interests: int = 4
+    capsule_iters: int = 3
+    hist_len: int = 50
+    pow_p: float = 2.0          # label-aware attention sharpness
+    temperature: float = 0.05   # in-batch softmax temperature
+    pad_id: int = 0
+
+
+def init(key, cfg: MINDConfig):
+    k1, k2, k3 = jax.random.split(key, 3)
+    d = cfg.embed_dim
+    return {
+        "embed": jax.random.normal(k1, (cfg.n_items, d), jnp.float32) * 0.02,
+        "bilinear": jax.random.normal(k2, (d, d), jnp.float32) / jnp.sqrt(d),
+        # fixed (non-trained in-iteration) routing-logit init projection
+        "route_init": jax.random.normal(k3, (d, cfg.n_interests), jnp.float32)
+        / jnp.sqrt(d),
+    }
+
+
+def _squash(z, axis=-1):
+    n2 = jnp.sum(jnp.square(z), axis=axis, keepdims=True)
+    return z * (n2 / (1.0 + n2)) / jnp.sqrt(jnp.maximum(n2, 1e-12))
+
+
+def lookup(params, ids):
+    """Embedding gather (the EmbeddingBag primitive: take + optional reduce)."""
+    return params["embed"][ids]
+
+
+def interests(params, cfg: MINDConfig, hist):
+    """hist (B, L) int32 → interest capsules (B, K, d)."""
+    e = lookup(params, hist)                              # (B, L, d)
+    mask = (hist != cfg.pad_id).astype(jnp.float32)       # (B, L)
+    eh = e @ params["bilinear"]                           # (B, L, d)
+    # routing logits: fixed projection of behaviours (MIND: random init,
+    # not backprop-trained through iterations — stop_gradient matches that)
+    b = jax.lax.stop_gradient(eh) @ params["route_init"]  # (B, L, K)
+    u = None
+    for _ in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b, axis=-1) * mask[:, :, None]
+        z = jnp.einsum("blk,bld->bkd", w, eh)
+        u = _squash(z)
+        b = b + jnp.einsum("bkd,bld->blk", u, jax.lax.stop_gradient(eh))
+    return u                                              # (B, K, d)
+
+
+def label_aware_user(params, cfg: MINDConfig, u, target_emb):
+    """Label-aware attention: pick interests relevant to the target item."""
+    att = jnp.einsum("bkd,bd->bk", u, target_emb)
+    att = jax.nn.softmax(att * cfg.pow_p, axis=-1)
+    return jnp.einsum("bk,bkd->bd", att, u)
+
+
+def loss_fn(params, cfg: MINDConfig, batch):
+    """batch: hist (B, L), target (B,). In-batch sampled softmax."""
+    hist, target = batch["hist"], batch["target"]
+    u = interests(params, cfg, hist)
+    t_emb = lookup(params, target)                        # (B, d)
+    v = label_aware_user(params, cfg, u, t_emb)           # (B, d)
+    logits = (v @ t_emb.T) / cfg.temperature              # (B, B) in-batch
+    labels = jnp.arange(hist.shape[0])
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[:, None], axis=-1)[:, 0]
+    loss = jnp.mean(logz - gold)
+    return loss, {"loss": loss}
+
+
+def serve_scores(params, cfg: MINDConfig, hist, cand_ids):
+    """hist (B, L); cand_ids (C,) shared slate → scores (B, C):
+    max over interests of interest·candidate (MIND serving rule)."""
+    u = interests(params, cfg, hist)                      # (B, K, d)
+    c = lookup(params, cand_ids)                          # (C, d)
+    s = jnp.einsum("bkd,cd->bkc", u, c)
+    return jnp.max(s, axis=1)
+
+
+def retrieval(params, cfg: MINDConfig, hist, cand_ids, top_k: int = 100):
+    """One (or few) users against a large candidate corpus; returns
+    (scores (B, C), top-k ids)."""
+    scores = serve_scores(params, cfg, hist, cand_ids)
+    vals, idx = jax.lax.top_k(scores, top_k)
+    return vals, cand_ids[idx]

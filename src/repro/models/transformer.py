@@ -1,0 +1,492 @@
+"""Decoder-only transformer LM (dense + MoE) with scan-over-layers, remat,
+KV-cache serving, and mesh sharding rules.
+
+One implementation covers all five assigned LM architectures (qwen3-moe,
+deepseek-moe, h2o-danube3 (SWA), stablelm, glm4) — differences are pure
+config.  Layers are stacked along a leading L dim and executed with
+``lax.scan`` (+ optional ``jax.checkpoint``), which keeps the HLO small
+enough to compile 94-layer configs and bounds activation memory.
+
+Sharding (GSPMD):
+  data axes  = ('pod','data')  → batch / FSDP parameter shards
+  model axis = 'model'         → TP (heads, d_ff, vocab) and EP (experts)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import layers as L
+from ..optim import adamw_init, adamw_update, cosine_schedule
+
+
+def _pin(x, spec: P):
+    """with_sharding_constraint that degrades to identity when no mesh is in
+    context (single-device tests / CPU smoke runs).
+
+    NB: guarded by *attempting* the constraint — `get_abstract_mesh()` is
+    empty under the legacy `with mesh:` context even though constraints DO
+    apply there (found the hard way: an emptiness check silently disabled
+    every pin during a re-sweep)."""
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (RuntimeError, ValueError):
+        return x
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: Optional[int] = None
+    moe: Optional[L.MoEConfig] = None
+    sliding_window: Optional[int] = None
+    rope_theta: float = 1e6
+    dtype: str = "bfloat16"
+    remat: bool = True
+    tie_embeddings: bool = False
+    qk_norm: bool = False
+    # scan_layers=True is the production config (small HLO, fast compile).
+    # The dry-run unrolls the loop instead: XLA's cost_analysis counts a
+    # while-loop body exactly ONCE regardless of trip count, so roofline
+    # accounting (flops / bytes / in-loop collectives) is only correct for
+    # the unrolled lowering.  Verified in tests/test_dryrun_account.py.
+    scan_layers: bool = True
+    lean_softmax: bool = False  # §Perf hillclimb B1 (lean attention softmax)
+    # §Perf hillclimb B3 (the big one): FSDP shards weights' d_model dim on
+    # the SAME 'data' axis that shards the batch.  Left to itself, GSPMD
+    # resolves the axis conflict by REPLICATING the batch dim of activations
+    # (16× compute/memory waste — verified in the baseline HLO: score
+    # tensors carried the full global batch).  Pinning each layer's weights
+    # to replicated right before use forces the ZeRO-3 schedule instead:
+    # all-gather weights (small), keep activations batch-sharded.
+    zero3_gather: bool = True
+    # gather MoE expert stacks too?  Helps fwd-only prefill (weights
+    # amortised over 32k tokens, 2-2.5x) but regresses training 2.5x
+    # (expert-grad all-reduces at full size) — set per cell kind (§Perf).
+    gather_experts: bool = False
+    # Megatron-style sequence parallelism (§Perf hillclimb B): outside the
+    # TP matmul regions the residual stream is sharded along sequence over
+    # the 'model' axis, so norms/residual adds stop being replicated 16×
+    # and the TP all-reduces lower to reduce-scatter + all-gather pairs.
+    seq_parallel: bool = False
+    # decode-time split-KV: axes sharding the KV-cache sequence dim (§Perf C)
+    decode_seq_axes: Optional[tuple] = None
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_head or self.d_model // self.n_heads
+
+    @property
+    def attn(self) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model,
+            n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads,
+            d_head=self.head_dim,
+            rope_theta=self.rope_theta,
+            sliding_window=self.sliding_window,
+            qk_norm=self.qk_norm,
+            lean_softmax=self.lean_softmax,
+            decode_seq_axes=self.decode_seq_axes,
+        )
+
+    @property
+    def param_count(self) -> int:
+        """Total parameters (for 6·N·D roofline accounting)."""
+        D, H = self.d_model, self.head_dim
+        attn = D * (self.n_heads * H) + 2 * D * (self.n_kv_heads * H) \
+            + (self.n_heads * H) * D
+        if self.moe:
+            ff = self.moe.n_experts * 3 * D * self.moe.d_expert \
+                + D * self.moe.n_experts \
+                + (3 * D * self.moe.d_shared * self.moe.n_shared if self.moe.n_shared else 0)
+        else:
+            ff = 3 * D * self.d_ff
+        norms = 2 * D
+        emb = self.vocab_size * D * (1 if self.tie_embeddings else 2)
+        return self.n_layers * (attn + ff + norms) + emb + D
+
+    @property
+    def active_param_count(self) -> int:
+        """Parameters touched per token (MoE: top-k + shared experts only)."""
+        if not self.moe:
+            return self.param_count
+        D = self.d_model
+        full_ff = self.moe.n_experts * 3 * D * self.moe.d_expert
+        act_ff = self.moe.top_k * 3 * D * self.moe.d_expert
+        return self.param_count - self.n_layers * (full_ff - act_ff)
+
+
+def _dt(cfg: LMConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init(key, cfg: LMConfig):
+    dt = _dt(cfg)
+    k_emb, k_layers, k_out = jax.random.split(key, 3)
+
+    def layer_init(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        p = {
+            "attn_norm": jnp.ones((cfg.d_model,), dt),
+            "attn": L.attn_init(k1, cfg.attn, dt),
+            "mlp_norm": jnp.ones((cfg.d_model,), dt),
+        }
+        if cfg.moe:
+            p["moe"] = L.moe_init(k2, cfg.d_model, cfg.moe, dt)
+        else:
+            p["mlp"] = L.swiglu_init(k3, cfg.d_model, cfg.d_ff, dt)
+        return p
+
+    layer_keys = jax.random.split(k_layers, cfg.n_layers)
+    layers = jax.vmap(layer_init)(layer_keys)  # stacked leading dim L
+
+    params = {
+        "embed": L.dense_init(k_emb, (cfg.vocab_size, cfg.d_model), dt, scale=1.0),
+        "layers": layers,
+        "final_norm": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = L.dense_init(k_out, (cfg.d_model, cfg.vocab_size), dt)
+    return params
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+def _sp_pins(cfg: LMConfig, seq_len: int):
+    """Sequence-parallel sharding pins (identity when SP is off/inapplicable)."""
+    if not cfg.seq_parallel or seq_len <= 1:
+        ident = lambda x: x
+        return ident, ident
+    # batch dim left unconstrained (pod×data on the multi-pod mesh)
+    U = P.UNCONSTRAINED
+    seq = P(U, "model", None)
+    full = P(U, None, None)
+    return (lambda x: _pin(x, seq)), (lambda x: _pin(x, full))
+
+
+def _gather_specs(cfg: LMConfig):
+    """Per-layer weight specs with the FSDP ('data') axis stripped: the TP
+    ('model') sharding is kept, the storage shards are all-gathered.
+
+    MoE EXPERT weights are excluded (spec=None → no pin): gathering multi-GB
+    expert stacks per layer regressed MoE training 2.5× in §Perf — the
+    dispatch einsum keeps them sharded and GSPMD's own schedule is better
+    there.  Router/shared-expert/attention weights are gathered."""
+    stacked = param_specs(cfg, fsdp=True)["layers"]
+
+    def strip(spec: P) -> P:
+        entries = []
+        for e in tuple(spec)[1:]:  # drop the stacked L dim
+            if e == "data":
+                e = None
+            elif isinstance(e, (tuple, list)):
+                kept = tuple(x for x in e if x != "data")
+                e = kept if kept else None
+            entries.append(e)
+        return P(*entries)
+
+    specs = jax.tree.map(strip, stacked, is_leaf=lambda x: isinstance(x, P))
+    if cfg.moe and not cfg.gather_experts:
+        # exclude the whole MoE block from gathering (experts AND router/
+        # shared): any storage-shard gather inside the dispatch region
+        # regressed MoE training — §Perf
+        specs["moe"] = jax.tree.map(
+            lambda s: None, specs["moe"],
+            is_leaf=lambda x: isinstance(x, P))
+    return specs
+
+
+def _gather_weights(lp, gspecs):
+    """ZeRO-3: materialise full layer weights (all-gather the FSDP shards).
+    Leaves with spec=None are left untouched (MoE experts)."""
+    return jax.tree.map(
+        lambda w, s: w if s is None else _pin(w, s), lp, gspecs,
+        is_leaf=lambda x: x is None or isinstance(x, P),
+    )
+
+
+def _layer_fwd(cfg: LMConfig, lp, x, positions):
+    if cfg.zero3_gather:
+        lp = _gather_weights(lp, _gather_specs(cfg))
+    pin_seq, pin_full = _sp_pins(cfg, x.shape[1])
+    # norms + residual arithmetic run sequence-sharded; the TP regions
+    # (attention / FFN) see the gathered sequence
+    x = pin_seq(x)
+    hn = pin_full(L.rmsnorm(x, lp["attn_norm"]))
+    h = x + pin_seq(L.attention(lp["attn"], cfg.attn, hn, positions))
+    hin = pin_full(L.rmsnorm(h, lp["mlp_norm"]))
+    if cfg.moe:
+        ff, aux = L.moe_block(lp["moe"], cfg.moe, hin)
+    else:
+        ff, aux = L.swiglu(lp["mlp"], hin), jnp.float32(0.0)
+    return h + pin_seq(ff), aux
+
+
+def forward(params, cfg: LMConfig, tokens):
+    """tokens (B, S) → logits (B, S, V), aux loss."""
+    x = params["embed"][tokens].astype(_dt(cfg))
+    if cfg.zero3_gather:
+        # The embedding table's d_model dim is FSDP-sharded on 'data' — the
+        # gather output would inherit that and force GSPMD to replicate the
+        # batch dim through the whole network (§Perf B3 root cause).  Pin the
+        # residual stream to batch-sharded / feature-replicated here.
+        x = _pin(x, P(P.UNCONSTRAINED, None, None))
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None, :], (B, S))
+
+    body = partial(_layer_fwd, cfg)
+    if cfg.remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+
+    if cfg.scan_layers:
+        def scan_fn(carry, lp):
+            x, aux = carry
+            x, a = body(lp, x, positions)
+            return (x, aux + a), None
+
+        (x, aux), _ = jax.lax.scan(scan_fn, (x, jnp.float32(0.0)), params["layers"])
+    else:
+        aux = jnp.float32(0.0)
+        for i in range(cfg.n_layers):
+            lp = jax.tree.map(lambda v: v[i], params["layers"])
+            x, a = body(lp, x, positions)
+            aux = aux + a
+    x = L.rmsnorm(x, params["final_norm"])
+    unemb = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    if cfg.zero3_gather:
+        # gather the unembedding's FSDP shards (77 MB) instead of partial-
+        # summing (B, S, V)-sized activations over 'data'
+        unemb = _pin(unemb, P(None, "model"))
+    logits = x @ unemb.astype(x.dtype)
+    return logits, aux
+
+
+def loss_fn(params, cfg: LMConfig, batch):
+    logits, aux = forward(params, cfg, batch["tokens"])
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, batch["labels"][..., None], axis=-1)[..., 0]
+    nll = jnp.mean(logz - gold)
+    return nll + aux, {"nll": nll, "aux": aux}
+
+
+# ---------------------------------------------------------------------------
+# training / serving steps
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: LMConfig, lr_peak: float = 3e-4, total_steps: int = 10_000):
+    def train_step(params, opt_state, batch):
+        (loss, metrics), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+            params, cfg, batch
+        )
+        lr = cosine_schedule(opt_state.step, 100, total_steps, lr_peak)
+        params, opt_state = adamw_update(grads, opt_state, params, lr)
+        metrics = dict(metrics, loss=loss, lr=lr)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill(cfg: LMConfig):
+    """Prefill: run the full sequence, return logits + KV caches."""
+
+    def prefill(params, tokens):
+        # NB: for the dry-run we lower the logits path; cache extraction is a
+        # second scan pass in serve.py (kept separate to keep HLO small).
+        logits, _ = forward(params, cfg, tokens)
+        return logits
+
+    return prefill
+
+
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=None):
+    dt = dtype or _dt(cfg)
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+    }
+
+
+def cache_specs(cfg: LMConfig, batch: int, max_seq: int):
+    dt = _dt(cfg)
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.head_dim)
+    return {
+        "k": jax.ShapeDtypeStruct(shape, dt),
+        "v": jax.ShapeDtypeStruct(shape, dt),
+    }
+
+
+def make_decode(cfg: LMConfig):
+    """One-token decode against a KV cache (scan over layers)."""
+
+    def decode(params, cache, tokens, pos, slot_mask=None):
+        # tokens: (B, 1) int32; pos: () int32 (shared) or (B,) (per-slot)
+        x = params["embed"][tokens].astype(_dt(cfg))
+
+        def scan_fn(x, layer):
+            lp, ck, cv = layer
+            h = L.rmsnorm(x, lp["attn_norm"])
+            a, ck, cv = L.attention_decode(lp["attn"], cfg.attn, h, ck, cv,
+                                           pos, slot_mask)
+            x = x + a
+            hin = L.rmsnorm(x, lp["mlp_norm"])
+            if cfg.moe:
+                ff, _ = L.moe_block(lp["moe"], cfg.moe, hin)
+            else:
+                ff = L.swiglu(lp["mlp"], hin)
+            return x + ff, (ck, cv)
+
+        if cfg.scan_layers:
+            (x), (new_k, new_v) = jax.lax.scan(
+                scan_fn, x, (params["layers"], cache["k"], cache["v"])
+            )
+        else:
+            ks, vs = [], []
+            for i in range(cfg.n_layers):
+                layer_i = jax.tree.map(lambda v: v[i], params["layers"])
+                x, (ck, cv) = scan_fn(x, (layer_i, cache["k"][i], cache["v"][i]))
+                ks.append(ck)
+                vs.append(cv)
+            new_k = jnp.stack(ks)
+            new_v = jnp.stack(vs)
+        x = L.rmsnorm(x, params["final_norm"])
+        unemb = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+        logits = x @ unemb.astype(x.dtype)
+        return logits, {"k": new_k, "v": new_v}
+
+    return decode
+
+
+# ---------------------------------------------------------------------------
+# sharding rules
+# ---------------------------------------------------------------------------
+
+def param_specs(cfg: LMConfig, fsdp: bool = True):
+    """PartitionSpec pytree matching ``init``'s output.
+
+    TP ('model'): attention heads, d_ff, experts, vocab.
+    FSDP ('data'): the d_model dim of the big matrices (ZeRO-3 style).
+    """
+    dp = "data" if fsdp else None
+    attn = {
+        "wq": P(None, dp, "model"),
+        "wk": P(None, dp, None),       # kv heads too few to split — replicate
+        "wv": P(None, dp, None),
+        "wo": P(None, "model", dp),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = P(None, None)
+        attn["k_norm"] = P(None, None)
+    layer = {
+        "attn_norm": P(None, None),
+        "attn": attn,
+        "mlp_norm": P(None, None),
+    }
+    if cfg.moe:
+        moe = {
+            "router": P(None, dp, None),
+            "we_gate": P(None, "model", dp, None),
+            "we_up": P(None, "model", dp, None),
+            "we_down": P(None, "model", None, dp),
+        }
+        if cfg.moe.n_shared:
+            moe["shared"] = {
+                "wi_gate": P(None, dp, "model"),
+                "wi_up": P(None, dp, "model"),
+                "wo": P(None, "model", dp),
+            }
+        layer["moe"] = moe
+    else:
+        layer["mlp"] = {
+            "wi_gate": P(None, dp, "model"),
+            "wi_up": P(None, dp, "model"),
+            "wo": P(None, "model", dp),
+        }
+    specs = {
+        "embed": P("model", dp),
+        "layers": layer,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(dp, "model")
+    return specs
+
+
+def param_specs_serve(cfg: LMConfig):
+    """Decode/serve sharding (§Perf hillclimb C): TP over 'model', dense
+    weights replicated over 'data', MoE experts 2D-sharded (E over 'data',
+    FFN dim over 'model').  No FSDP storage shards → no per-step weight
+    all-gathers (the baseline gathered ~100 GB/device/token on qwen3);
+    per-layer collectives shrink to (B, 1, ·)-sized all-reduces + the MoE
+    dispatch all-to-all."""
+    attn = {
+        "wq": P(None, None, "model"),
+        "wk": P(None, None, None),
+        "wv": P(None, None, None),
+        "wo": P(None, "model", None),
+    }
+    if cfg.qk_norm:
+        attn["q_norm"] = P(None, None)
+        attn["k_norm"] = P(None, None)
+    layer = {
+        "attn_norm": P(None, None),
+        "attn": attn,
+        "mlp_norm": P(None, None),
+    }
+    if cfg.moe:
+        moe = {
+            "router": P(None, None, None),
+            "we_gate": P(None, "data", None, "model"),
+            "we_up": P(None, "data", None, "model"),
+            "we_down": P(None, "data", "model", None),
+        }
+        if cfg.moe.n_shared:
+            moe["shared"] = {
+                "wi_gate": P(None, None, "model"),
+                "wi_up": P(None, None, "model"),
+                "wo": P(None, "model", None),
+            }
+        layer["moe"] = moe
+    else:
+        layer["mlp"] = {
+            "wi_gate": P(None, None, "model"),
+            "wi_up": P(None, None, "model"),
+            "wo": P(None, "model", None),
+        }
+    specs = {
+        "embed": P("model", None),
+        "layers": layer,
+        "final_norm": P(None),
+    }
+    if not cfg.tie_embeddings:
+        specs["unembed"] = P(None, "model")
+    return specs
+
+
+def cache_pspec(batch_axes, seq_axis=None):
+    # (L, B, S, KV, dh): shard batch over data axes; long-context decode
+    # shards the sequence dim instead (flash-decoding split-KV style).
+    return {
+        "k": P(None, batch_axes, seq_axis, None, None),
+        "v": P(None, batch_axes, seq_axis, None, None),
+    }

@@ -1,0 +1,6 @@
+from .adamw import AdamWState, adamw_init, adamw_update  # noqa: F401
+from .schedule import cosine_schedule, linear_warmup  # noqa: F401
+from .compression import (  # noqa: F401
+    CompressionState, compress_int8, compressed_gradient, compression_init,
+    decompress_int8,
+)

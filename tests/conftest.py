@@ -1,0 +1,6 @@
+import os
+import sys
+
+# make the numpy oracle helpers importable regardless of how pytest is
+# invoked (the documented entrypoint is `PYTHONPATH=src pytest tests/`)
+sys.path.insert(0, os.path.dirname(__file__))

@@ -1,0 +1,133 @@
+"""Pure-numpy reference implementations for the seven paper benchmarks."""
+
+from __future__ import annotations
+
+import heapq
+from collections import deque
+
+import numpy as np
+
+INF = np.float32(np.finfo(np.float32).max / 4)
+
+
+def adj_lists(src, dst, n, w=None):
+    out = [[] for _ in range(n)]
+    if w is None:
+        w = np.ones(len(src), np.float32)
+    for s, d, ww in zip(src, dst, w):
+        out[int(s)].append((int(d), float(ww)))
+    return out
+
+
+def bfs(src_arr, dst_arr, n, source):
+    adj = adj_lists(src_arr, dst_arr, n)
+    dist = np.full(n, np.inf)
+    dist[source] = 0
+    q = deque([source])
+    while q:
+        u = q.popleft()
+        for v, _ in adj[u]:
+            if dist[v] == np.inf:
+                dist[v] = dist[u] + 1
+                q.append(v)
+    return dist
+
+
+def dijkstra(src_arr, dst_arr, w_arr, n, source):
+    adj = adj_lists(src_arr, dst_arr, n, w_arr)
+    dist = np.full(n, np.inf)
+    dist[source] = 0.0
+    pq = [(0.0, source)]
+    while pq:
+        d, u = heapq.heappop(pq)
+        if d > dist[u]:
+            continue
+        for v, ww in adj[u]:
+            nd = d + ww
+            if nd < dist[v] - 1e-9:
+                dist[v] = nd
+                heapq.heappush(pq, (nd, v))
+    return dist
+
+
+def connected_components(src_arr, dst_arr, n):
+    parent = list(range(n))
+
+    def find(x):
+        while parent[x] != x:
+            parent[x] = parent[parent[x]]
+            x = parent[x]
+        return x
+
+    for s, d in zip(src_arr, dst_arr):
+        a, b = find(int(s)), find(int(d))
+        if a != b:
+            parent[max(a, b)] = min(a, b)
+    return np.array([find(i) for i in range(n)])
+
+
+def pagerank(src_arr, dst_arr, n, damping=0.85, iters=200, tol=1e-10):
+    outdeg = np.bincount(src_arr, minlength=n).astype(np.float64)
+    rank = np.full(n, 1.0 / n)
+    for _ in range(iters):
+        contrib = np.where(outdeg > 0, rank / np.maximum(outdeg, 1), 0.0)
+        new = np.zeros(n)
+        np.add.at(new, dst_arr, contrib[src_arr])
+        dmass = rank[outdeg == 0].sum()
+        new = (1 - damping) / n + damping * (new + dmass / n)
+        if np.abs(new - rank).sum() < tol:
+            rank = new
+            break
+        rank = new
+    return rank
+
+
+def kcore_alive(src_arr, dst_arr, n, k):
+    """Peel (on an already-symmetric edge list). Returns alive bool mask."""
+    deg = np.bincount(src_arr, minlength=n)
+    alive = np.ones(n, bool)
+    changed = True
+    adj = adj_lists(src_arr, dst_arr, n)
+    while changed:
+        changed = False
+        for u in range(n):
+            if alive[u] and deg[u] < k:
+                alive[u] = False
+                changed = True
+                for v, _ in adj[u]:
+                    deg[v] -= 1
+    return alive
+
+
+def brandes_bc(src_arr, dst_arr, n, source):
+    adj = adj_lists(src_arr, dst_arr, n)
+    dist = np.full(n, -1)
+    sigma = np.zeros(n)
+    dist[source] = 0
+    sigma[source] = 1
+    order = [source]
+    q = deque([source])
+    while q:
+        u = q.popleft()
+        for v, _ in adj[u]:
+            if dist[v] < 0:
+                dist[v] = dist[u] + 1
+                q.append(v)
+                order.append(v)
+            if dist[v] == dist[u] + 1:
+                sigma[v] += sigma[u]
+    delta = np.zeros(n)
+    for u in reversed(order):
+        for v, _ in adj[u]:
+            if dist[v] == dist[u] + 1:
+                delta[u] += sigma[u] / sigma[v] * (1 + delta[v])
+    delta[source] = 0
+    return delta
+
+
+def triangle_count(src_arr, dst_arr, n):
+    a = np.zeros((n, n), np.float64)
+    a[src_arr, dst_arr] = 1
+    a = np.maximum(a, a.T)
+    np.fill_diagonal(a, 0)
+    return int(round(np.trace(a @ a @ a) / 6))

@@ -1,0 +1,114 @@
+"""Correctness of the seven paper benchmarks against numpy oracles."""
+
+import numpy as np
+import pytest
+
+from repro.core import from_coo
+from repro.core.algorithms import bc, bfs, cc, kcore, pagerank, sssp, tc
+from repro.graphs import generators as gen
+
+import oracles
+
+GRAPHS = {
+    "rmat_small": lambda: gen.rmat(7, 8, seed=3),
+    "web_like": lambda: gen.web_crawl_like(8, 4, 6, 2, seed=1),
+    "erdos": lambda: gen.erdos(300, 2500, seed=2),
+    "grid": lambda: gen.grid2d(17, 13),
+    "path": lambda: gen.path(50),
+}
+
+
+def build(name, symmetrize=False, weighted=False, csc=False, block=64):
+    src, dst, n = GRAPHS[name]()
+    w = gen.random_weights(len(src), seed=7) if weighted else None
+    g = from_coo(src, dst, n, w, block_size=block, build_csc=csc,
+                 symmetrize=symmetrize)
+    # matching host-side edge list (post symmetrize/dedup) for the oracle
+    s = np.asarray(g.src_idx)[: g.m]
+    d = np.asarray(g.col_idx)[: g.m]
+    ww = np.asarray(g.edge_w)[: g.m]
+    return g, s, d, ww, n
+
+
+def max_outdeg_vertex(s, n):
+    return int(np.argmax(np.bincount(s, minlength=n)))
+
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+@pytest.mark.parametrize("variant", ["topo", "dd_dense", "dd_sparse", "dirop"])
+def test_bfs(gname, variant):
+    g, s, d, _, n = build(gname, csc=(variant == "dirop"))
+    source = max_outdeg_vertex(s, n)
+    ref = oracles.bfs(s, d, n, source)
+    dist, stats = bfs.VARIANTS[variant](g, source)
+    dist = np.asarray(dist)[:n]
+    got = np.where(dist > 1e30, np.inf, dist)
+    np.testing.assert_allclose(got, ref, rtol=0, atol=0)
+    assert stats.rounds > 0
+
+
+@pytest.mark.parametrize("gname", ["rmat_small", "web_like", "grid"])
+@pytest.mark.parametrize("variant", ["bellman_ford", "dd_dense", "dd_sparse", "delta"])
+def test_sssp(gname, variant):
+    g, s, d, w, n = build(gname, weighted=True)
+    source = max_outdeg_vertex(s, n)
+    ref = oracles.dijkstra(s, d, w, n, source)
+    dist, _ = sssp.VARIANTS[variant](g, source)
+    dist = np.asarray(dist)[:n]
+    got = np.where(dist > 1e30, np.inf, dist)
+    finite = np.isfinite(ref)
+    assert np.array_equal(np.isfinite(got), finite)
+    np.testing.assert_allclose(got[finite], ref[finite], rtol=1e-5)
+
+
+@pytest.mark.parametrize("gname", ["rmat_small", "web_like", "erdos", "grid"])
+@pytest.mark.parametrize("variant", ["labelprop", "labelprop_sc", "pointer_jump"])
+def test_cc(gname, variant):
+    g, s, d, _, n = build(gname, symmetrize=True)
+    ref = oracles.connected_components(s, d, n)
+    lab, _ = cc.VARIANTS[variant](g)
+    lab = np.asarray(lab)[:n]
+    # same partition: labels must induce identical equivalence classes
+    _, ref_ids = np.unique(ref, return_inverse=True)
+    _, got_ids = np.unique(lab, return_inverse=True)
+    assert np.array_equal(ref_ids, got_ids)
+
+
+@pytest.mark.parametrize("gname", ["rmat_small", "web_like", "grid"])
+@pytest.mark.parametrize("variant", ["pull", "push"])
+def test_pagerank(gname, variant):
+    # symmetrize → no dangling vertices → push and pull share a fixpoint
+    g, s, d, _, n = build(gname, symmetrize=True, csc=True)
+    ref = oracles.pagerank(s, d, n)
+    if variant == "pull":
+        rank, _ = pagerank.pr_pull(g, tol=1e-10, max_iters=300)
+    else:
+        rank, _ = pagerank.pr_push(g, tol=1e-12, max_iters=5000)
+    rank = np.asarray(rank)[:n]
+    np.testing.assert_allclose(rank, ref, rtol=2e-3, atol=1e-8)
+
+
+@pytest.mark.parametrize("gname", ["rmat_small", "erdos", "grid"])
+@pytest.mark.parametrize("k", [2, 3, 5])
+def test_kcore(gname, k):
+    g, s, d, _, n = build(gname, symmetrize=True)
+    ref = oracles.kcore_alive(s, d, n, k)
+    alive, _ = kcore.kcore_peel(g, k)
+    assert np.array_equal(np.asarray(alive)[:n], ref)
+
+
+@pytest.mark.parametrize("gname", ["rmat_small", "web_like", "grid", "path"])
+def test_bc(gname):
+    g, s, d, _, n = build(gname)
+    source = max_outdeg_vertex(s, n)
+    ref = oracles.brandes_bc(s, d, n, source)
+    score, _ = bc.bc_brandes(g, source)
+    np.testing.assert_allclose(np.asarray(score)[:n], ref, rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("gname", ["rmat_small", "web_like", "erdos", "grid"])
+def test_tc(gname):
+    g, s, d, _, n = build(gname, symmetrize=True)
+    ref = oracles.triangle_count(s, d, n)
+    got, _ = tc.tc_count(g, edge_chunk=4096)
+    assert int(got) == ref

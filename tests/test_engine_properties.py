@@ -1,0 +1,138 @@
+"""Property-based tests (hypothesis) for the engine's core invariants:
+sparse advance ≡ dense push, compaction, capacity ladders, placement
+interleaving, direction-optimizing switches."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import from_coo
+from repro.core import frontier as fr
+from repro.core import operators as ops
+
+
+def _graph(n, edges, seed):
+    r = np.random.default_rng(seed)
+    m = max(len(edges), 1)
+    src = np.array([e[0] for e in edges], np.int64) if edges else np.array([0])
+    dst = np.array([e[1] for e in edges], np.int64) if edges else np.array([1 % n])
+    w = r.uniform(1, 4, len(src)).astype(np.float32)
+    return from_coo(src % n, dst % n, n, w, block_size=16)
+
+
+graph_strategy = st.builds(
+    lambda n, edges, seed: (_graph(n, edges, seed), n),
+    n=st.integers(4, 60),
+    edges=st.lists(st.tuples(st.integers(0, 59), st.integers(0, 59)),
+                   min_size=1, max_size=200),
+    seed=st.integers(0, 2**31 - 1),
+)
+
+
+@settings(max_examples=25, deadline=None)
+@given(gn=graph_strategy, mask_seed=st.integers(0, 2**31 - 1))
+def test_sparse_advance_equals_dense_push(gn, mask_seed):
+    """For ANY frontier, merge-path sparse relax == dense masked relax when
+    the budget covers the frontier's edge mass."""
+    g, n = gn
+    r = np.random.default_rng(mask_seed)
+    mask = jnp.asarray(r.random(g.n_pad) < 0.4)
+    mask = mask.at[g.sentinel].set(False)
+    mask = mask & (jnp.arange(g.n_pad) < g.n)
+    vals = jnp.asarray(r.uniform(0, 10, g.n_pad).astype(np.float32))
+
+    dense = ops.push_dense(g, vals, mask, vals, kind="min")
+
+    cap = g.n_pad
+    f = fr.compact(mask, cap, g.sentinel)
+    budget = int(jnp.sum(jnp.where(mask, g.out_deg, 0))) + 16
+    batch = ops.advance_sparse(g, f, budget)
+    sparse = ops.relax_batch(batch, vals, vals, kind="min")
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(sparse))
+    # advance enumerated exactly the frontier's edge mass
+    assert int(batch.total) == int(jnp.sum(jnp.where(mask, g.out_deg, 0)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(gn=graph_strategy, seed=st.integers(0, 2**31 - 1),
+       cap_shift=st.integers(0, 3))
+def test_compact_roundtrip(gn, seed, cap_shift):
+    g, n = gn
+    r = np.random.default_rng(seed)
+    mask = jnp.asarray(r.random(g.n_pad) < 0.3)
+    mask = mask.at[g.sentinel].set(False)
+    true_count = int(jnp.sum(mask))
+    cap = max(1, true_count << cap_shift)
+    f = fr.compact(mask, cap, g.sentinel)
+    assert int(f.count) == true_count
+    idx = np.asarray(f.idx)
+    got = set(idx[idx != g.sentinel][: true_count].tolist())
+    expect = set(np.nonzero(np.asarray(mask))[0].tolist())
+    assert got == expect
+
+
+def test_capacity_ladder_monotone_covers():
+    ladder = fr.ladder_capacities(4096, 64, base=4)
+    assert ladder[-1] == 4096
+    assert all(a < b for a, b in zip(ladder, ladder[1:]))
+    for c in (1, 63, 64, 100, 4096):
+        assert fr.pick_capacity(c, ladder) >= c
+
+
+@settings(max_examples=20, deadline=None)
+@given(nb=st.integers(1, 16), bs=st.sampled_from([4, 16]),
+       ndev=st.sampled_from([1, 2, 4]))
+def test_interleave_blocks_is_permutation(nb, bs, ndev):
+    from repro.core.placement import interleave_blocks
+
+    x = jnp.arange(nb * bs)
+    y = interleave_blocks(x, bs, ndev)
+    assert sorted(np.asarray(y).tolist()) == list(range(nb * bs))
+    if nb % ndev == 0:
+        # device d's contiguous shard holds blocks ≡ d (mod ndev)
+        per = nb // ndev
+        yv = np.asarray(y).reshape(nb, bs)
+        for d in range(ndev):
+            shard = yv[d * per:(d + 1) * per]
+            blocks = set((shard[:, 0] // bs).tolist())
+            assert all(b % ndev == d for b in blocks)
+
+
+def test_direction_choice_hysteresis():
+    g = _graph(32, [(0, 1)], 0)
+    # big frontier mass → pull
+    assert bool(ops.direction_choice(
+        g, jnp.float32(1000.0), jnp.float32(100.0), jnp.float32(30.0),
+        jnp.bool_(False)))
+    # pull persists until the frontier shrinks below n/beta
+    assert bool(ops.direction_choice(
+        g, jnp.float32(10.0), jnp.float32(100.0), jnp.float32(30.0),
+        jnp.bool_(True)))
+    assert not bool(ops.direction_choice(
+        g, jnp.float32(10.0), jnp.float32(100.0), jnp.float32(0.5),
+        jnp.bool_(True)))
+
+
+@settings(max_examples=15, deadline=None)
+@given(gn=graph_strategy, src_seed=st.integers(0, 2**31 - 1))
+def test_bfs_variants_agree(gn, src_seed):
+    """All four BFS classes compute identical distances on arbitrary graphs
+    (with unit weights)."""
+    from repro.core.algorithms import bfs
+    import dataclasses as dc
+
+    g, n = gn
+    g = dc.replace(g, edge_w=jnp.ones_like(g.edge_w))
+    # need CSC for dirop — rebuild
+    src = np.asarray(g.src_idx)[: g.m]
+    dst = np.asarray(g.col_idx)[: g.m]
+    g2 = from_coo(src, dst, n, block_size=16, build_csc=True)
+    source = int(np.random.default_rng(src_seed).integers(0, n))
+    outs = {}
+    for name, fn in bfs.VARIANTS.items():
+        d, _ = fn(g2, source)
+        outs[name] = np.asarray(d)[:n]
+    base = outs["topo"]
+    for name, o in outs.items():
+        np.testing.assert_allclose(o, base, err_msg=name)
