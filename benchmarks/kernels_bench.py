@@ -1,10 +1,14 @@
 """Kernel micro-benchmarks: µs/call (interpret-mode on CPU — correctness
 path; real perf comes from the dry-run roofline) + achieved-FLOP counts for
-the Pallas kernels vs their jnp oracles."""
+the Pallas kernels vs their jnp oracles.  The graph_ops section times every
+edge-relaxation operator on **both** substrates (jnp vs pallas) plus one
+end-to-end sparse-ladder BFS per backend, with ``RunStats.substrate`` in the
+derived column."""
 
 from __future__ import annotations
 
 import numpy as np
+import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import flash_attention_bhsd
@@ -16,6 +20,53 @@ from repro.kernels.embedding_bag.ref import embedding_bag_ref
 from .common import row, time_call
 
 RNG = np.random.default_rng(0)
+
+
+def _graph_ops_rows():
+    """Per-substrate timings for push/pull/advance+relax and e2e BFS."""
+    from repro.core import from_coo
+    from repro.core import frontier as fr
+    from repro.core import operators as ops
+    from repro.core.algorithms import bfs
+    from repro.graphs import generators as gen
+
+    rows = []
+    src, dst, n = gen.rmat(10, 12, seed=1)
+    g = from_coo(src, dst, n, block_size=512, build_csc=True)
+    sv = jnp.asarray(RNG.normal(size=g.n_pad).astype(np.float32))
+    active = jnp.asarray(RNG.random(g.n_pad) < 0.5).at[g.sentinel].set(False)
+    init = g.vertex_full(jnp.finfo(jnp.float32).max, jnp.float32)
+    cap = g.block_size
+    budget = 4 * g.block_size
+    f = fr.compact(active, cap, g.sentinel)
+
+    for sub in ops.SUBSTRATES:
+        push = jax.jit(lambda v, a, o, s=sub: ops.push_dense(
+            g, v, a, o, kind="min", substrate=s))
+        pull = jax.jit(lambda v, a, o, s=sub: ops.pull_dense(
+            g, v, a, o, kind="min", substrate=s))
+
+        def adv_relax(v, o, s=sub):
+            batch = ops.advance_sparse(g, f, budget, substrate=s)
+            return ops.relax_batch(batch, v, o, kind="min", substrate=s)
+
+        adv = jax.jit(adv_relax)
+        us = time_call(lambda: push(sv, active, init))
+        rows.append(row(f"kern/graph_push[{sub}]", us,
+                        f"m={g.m};edge_slots={g.m_pad}"))
+        us = time_call(lambda: pull(sv, active, init))
+        rows.append(row(f"kern/graph_pull[{sub}]", us,
+                        f"m={g.m};edge_slots={g.m_pad}"))
+        us = time_call(lambda: adv(sv, init))
+        rows.append(row(f"kern/graph_advance_relax[{sub}]", us,
+                        f"cap={cap};budget={budget}"))
+        with ops.substrate_scope(sub):
+            us = time_call(lambda: bfs.bfs_dd_sparse(g, 0)[0])
+            _, stats = bfs.bfs_dd_sparse(g, 0)
+        rows.append(row(f"kern/graph_bfs_e2e[{sub}]", us,
+                        f"substrate={stats.substrate};rounds={stats.rounds};"
+                        f"edges_touched={stats.edges_touched}"))
+    return rows
 
 
 def run():
@@ -50,4 +101,7 @@ def run():
     us_r = time_call(lambda: embedding_bag_ref(ids, ws, table))
     rows.append(row("kern/embedding_bag_32x10", us_k,
                     f"ref_us={us_r:.0f};rows_gathered={b*l}"))
+
+    # graph edge-relaxation substrate (jnp vs pallas)
+    rows.extend(_graph_ops_rows())
     return rows

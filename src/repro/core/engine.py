@@ -17,7 +17,9 @@ Two execution regimes, mirroring the paper's §5 classification:
 Both engines report work counters so benchmarks can reproduce the paper's
 work-efficiency argument (Fig. 6/7): ``edges_touched`` is the number of edge
 slots actually processed, which for the dense engine is m per round and for
-the sparse engine is the chosen budget.
+the sparse engine is the chosen budget.  ``RunStats.substrate`` records
+which relaxation substrate ("jnp" or "pallas" — see operators.py) the run
+lowered through.
 """
 
 from __future__ import annotations
@@ -29,6 +31,7 @@ import jax
 import jax.numpy as jnp
 
 from . import frontier as fr
+from . import operators as ops
 from .graph import Graph
 
 
@@ -39,6 +42,8 @@ class RunStats:
     dense_rounds: int = 0
     sparse_rounds: int = 0
     compiles: int = 0
+    # relaxation backend the run lowered through (operators.get_substrate())
+    substrate: str = dataclasses.field(default_factory=ops.get_substrate)
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -105,6 +110,13 @@ class SparseLadderEngine:
 
     def run(self, labels, mask, max_rounds: int = 10_000):
         g = self.g
+        # cached steps were traced under the substrate active at trace time;
+        # if the engine-wide selection changed since, drop them so the run
+        # actually executes (and reports) the current backend
+        if ops.get_substrate() != self.stats.substrate:
+            self._sparse = {}
+            self._dense = None
+        self.stats.substrate = ops.get_substrate()
         # max sparse budget: don't bother with sparse when it costs ~ dense
         sparse_cutoff = self.budget_ladder[-1] // 2
         for _ in range(max_rounds):

@@ -68,10 +68,14 @@ class SparseFrontier:
     def overflowed(self) -> jax.Array:
         return self.count > self.capacity
 
+    def valid_slots(self) -> jax.Array:
+        """(capacity,) bool — which worklist slots hold real vertices
+        (``count`` may exceed capacity when compaction overflowed)."""
+        return jnp.arange(self.capacity) < jnp.minimum(self.count, self.capacity)
+
     def edge_mass(self, g: Graph) -> jax.Array:
         deg = g.out_deg[self.idx]
-        valid = jnp.arange(self.capacity) < self.count
-        return jnp.sum(jnp.where(valid, deg, 0))
+        return jnp.sum(jnp.where(self.valid_slots(), deg, 0))
 
 
 def dense_from_indices(indices, n_pad: int) -> DenseFrontier:

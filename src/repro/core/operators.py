@@ -15,52 +15,68 @@ These are the engine's "operator" layer in the paper's classification (§5.1):
 * ``direction_choice`` — Beamer's α/β heuristic for direction-optimizing
   traversal, used by bfs_dirop (the paper's §5.2 comparison point).
 
-All reductions go through ``scatter_reduce`` (``.at[].min/max/add``) keyed by
-destination, or sorted ``segment_*`` ops in pull mode (CSC is sorted by
-destination, so ``indices_are_sorted=True``).
+Every relaxation op lowers through a selectable **substrate**:
+
+* ``"jnp"``    — generic XLA scatter / sorted segment ops
+  (``kernels/graph_ops/ref.py``, the reference semantics);
+* ``"pallas"`` — the blocked Pallas kernels in ``kernels/graph_ops/``
+  (``interpret=True`` on CPU; real lowering on accelerators).
+
+Select globally with ``set_substrate("pallas")`` / the ``substrate_scope``
+context manager, or per call via the ``substrate=`` argument.  Algorithms
+and engines run unmodified on either; ``RunStats.substrate`` records which
+one a run used.  The selection is read at trace time, so don't flip it
+under a cached jitted step (each ``SparseLadderEngine`` instance and each
+``run_dense`` call traces afresh, which is why those run unmodified).
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 from typing import Tuple
 
 import jax
 import jax.numpy as jnp
 
+from ..kernels import graph_ops as gk
+from ..kernels.graph_ops import neutral_for, scatter_reduce  # noqa: F401 (re-export)
 from .frontier import DenseFrontier, SparseFrontier
 from .graph import Graph
 
-def neutral_for(kind: str, dtype) -> jax.Array:
-    """Identity element of the reduction, in the accumulator's dtype."""
-    dtype = jnp.dtype(dtype)
-    if kind == "add":
-        return jnp.zeros((), dtype)
-    if dtype == bool:
-        return jnp.array(kind == "min", dtype)
-    big = jnp.finfo(dtype).max if jnp.issubdtype(dtype, jnp.inexact) else jnp.iinfo(dtype).max
-    low = jnp.finfo(dtype).min if jnp.issubdtype(dtype, jnp.inexact) else jnp.iinfo(dtype).min
-    if kind == "min":
-        return jnp.array(big, dtype)
-    if kind == "max":
-        return jnp.array(low, dtype)
-    raise ValueError(kind)
+SUBSTRATES = ("jnp", "pallas")
+_substrate = "jnp"
 
 
-def scatter_reduce(dst, msg, out, kind: str):
-    """Reduce ``msg`` into ``out`` at positions ``dst``."""
-    ref = out.at[dst]
-    if kind == "min":
-        return ref.min(msg)
-    if kind == "max":
-        return ref.max(msg)
-    if kind == "add":
-        return ref.add(msg)
-    if kind == "or":
-        return ref.max(msg.astype(out.dtype)) if out.dtype != bool else ref.set(
-            jnp.logical_or(out[dst], msg)
-        )
-    raise ValueError(kind)
+def set_substrate(name: str) -> None:
+    """Select the engine-wide relaxation substrate ("jnp" or "pallas")."""
+    global _substrate
+    if name not in SUBSTRATES:
+        raise ValueError(f"unknown substrate {name!r}; pick from {SUBSTRATES}")
+    _substrate = name
+
+
+def get_substrate() -> str:
+    return _substrate
+
+
+@contextlib.contextmanager
+def substrate_scope(name: str):
+    """Temporarily select a substrate: ``with substrate_scope("pallas"): ...``"""
+    prev = get_substrate()
+    set_substrate(name)
+    try:
+        yield
+    finally:
+        set_substrate(prev)
+
+
+def _resolve(substrate) -> str:
+    if substrate is None:
+        return _substrate
+    if substrate not in SUBSTRATES:
+        raise ValueError(f"unknown substrate {substrate!r}; pick from {SUBSTRATES}")
+    return substrate
 
 
 def push_dense(
@@ -70,6 +86,7 @@ def push_dense(
     out_init: jax.Array,
     kind: str = "min",
     use_weight: bool = True,
+    substrate: str | None = None,
 ) -> jax.Array:
     """Relax every edge whose source is active.
 
@@ -79,15 +96,13 @@ def push_dense(
     Message is ``src_val[src] + w`` for min/max ("tropical" relax) and
     ``src_val[src] * w`` for add (weighted contribution).
     """
-    s, d, w = g.src_idx, g.col_idx, g.edge_w
-    v = src_val[s]
-    if kind in ("min", "max"):
-        msg = v + w if use_weight else v
-    else:
-        msg = v * w if use_weight else v
-    neutral = neutral_for(kind, out_init.dtype)
-    msg = jnp.where(active[s], msg.astype(out_init.dtype), neutral)
-    return scatter_reduce(d, msg, out_init, kind)
+    if _resolve(substrate) == "pallas":
+        return gk.edge_relax(
+            g.src_idx, g.col_idx, g.edge_w, active, src_val, out_init,
+            kind=kind, use_weight=use_weight, vertex_mask=True,
+        )
+    return gk.push_ref(g.src_idx, g.col_idx, g.edge_w, src_val, active,
+                       out_init, kind, use_weight)
 
 
 def pull_dense(
@@ -97,34 +112,20 @@ def pull_dense(
     out_init: jax.Array,
     kind: str = "min",
     use_weight: bool = True,
+    substrate: str | None = None,
 ) -> jax.Array:
     """Pull-style relax over in-edges: each vertex reduces over its
-    in-neighbours.  Requires CSC.  Uses sorted segment ops (in-edges are
-    grouped by destination)."""
+    in-neighbours.  Requires CSC.  The jnp substrate uses sorted segment ops
+    (in-edges are grouped by destination, ``indices_are_sorted=True``); the
+    Pallas substrate walks the same dst-sorted edge blocks."""
     assert g.has_csc, "pull_dense requires build_csc=True"
-    nbr = g.in_col_idx       # in-neighbour (source of the original edge)
-    dst = g.in_src_idx       # destination vertex, sorted ascending
-    w = g.in_edge_w
-    v = src_val[nbr]
-    if kind in ("min", "max"):
-        msg = v + w if use_weight else v
-    else:
-        msg = v * w if use_weight else v
-    neutral = neutral_for(kind, out_init.dtype)
-    msg = jnp.where(active[nbr], msg.astype(out_init.dtype), neutral)
-    seg = dict(
-        num_segments=g.n_pad, indices_are_sorted=True
-    )
-    if kind == "min":
-        red = jax.ops.segment_min(msg, dst, **seg)
-        return jnp.minimum(out_init, red)
-    if kind == "max":
-        red = jax.ops.segment_max(msg, dst, **seg)
-        return jnp.maximum(out_init, red)
-    if kind == "add":
-        red = jax.ops.segment_sum(msg, dst, **seg)
-        return out_init + red
-    raise ValueError(kind)
+    if _resolve(substrate) == "pallas":
+        return gk.edge_relax(
+            g.in_col_idx, g.in_src_idx, g.in_edge_w, active, src_val,
+            out_init, kind=kind, use_weight=use_weight, vertex_mask=True,
+        )
+    return gk.pull_ref(g.in_col_idx, g.in_src_idx, g.in_edge_w, src_val,
+                       active, out_init, kind, use_weight)
 
 
 @jax.tree_util.register_dataclass
@@ -139,25 +140,22 @@ class EdgeBatch:
     total: jax.Array   # () int32 — true number of frontier edges (overflow check)
 
 
-def advance_sparse(g: Graph, f: SparseFrontier, budget: int) -> EdgeBatch:
+def advance_sparse(
+    g: Graph, f: SparseFrontier, budget: int, substrate: str | None = None
+) -> EdgeBatch:
     """Merge-path expansion of a sparse frontier into ≤ budget edge slots."""
-    cap = f.capacity
-    in_list = jnp.arange(cap) < jnp.minimum(f.count, cap)
-    deg = jnp.where(in_list, g.out_deg[f.idx], 0)
-    cum = jnp.cumsum(deg)
-    total = cum[-1] if cap > 0 else jnp.int32(0)
-    j = jnp.arange(budget, dtype=jnp.int32)
-    k = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
-    k = jnp.clip(k, 0, cap - 1)
-    prev = jnp.where(k > 0, cum[jnp.maximum(k - 1, 0)], 0)
-    u = f.idx[k]
-    e = g.row_ptr[u] + (j - prev)
-    valid = j < total
-    e = jnp.where(valid, e, g.m_pad - 1)  # padded edge → sentinel dst, w=0
-    u = jnp.where(valid, u, g.sentinel)
-    return EdgeBatch(
-        src=u, dst=g.col_idx[e], w=g.edge_w[e], valid=valid, total=total
-    )
+    if _resolve(substrate) == "pallas":
+        src, dst, w, valid, total = gk.advance_frontier(
+            f.idx, f.count, g.out_deg, g.row_ptr, g.col_idx, g.edge_w,
+            budget=budget, sentinel=g.sentinel, m_pad=g.m_pad,
+        )
+    else:
+        src, dst, w, valid, total = gk.advance_ref(
+            f.idx, f.count, g.out_deg, g.row_ptr, g.col_idx, g.edge_w,
+            budget=budget, sentinel=g.sentinel, m_pad=g.m_pad,
+        )
+    return EdgeBatch(src=src, dst=dst, w=w, valid=valid,
+                     total=jnp.asarray(total, jnp.int32))
 
 
 def relax_batch(
@@ -166,16 +164,16 @@ def relax_batch(
     out_init: jax.Array,
     kind: str = "min",
     use_weight: bool = True,
+    substrate: str | None = None,
 ) -> jax.Array:
     """Apply a relaxation over an EdgeBatch (sparse counterpart of push_dense)."""
-    v = src_val[batch.src]
-    if kind in ("min", "max"):
-        msg = v + batch.w if use_weight else v
-    else:
-        msg = v * batch.w if use_weight else v
-    neutral = neutral_for(kind, out_init.dtype)
-    msg = jnp.where(batch.valid, msg.astype(out_init.dtype), neutral)
-    return scatter_reduce(batch.dst, msg, out_init, kind)
+    if _resolve(substrate) == "pallas":
+        return gk.edge_relax(
+            batch.src, batch.dst, batch.w, batch.valid, src_val, out_init,
+            kind=kind, use_weight=use_weight, vertex_mask=False,
+        )
+    return gk.relax_ref(batch.src, batch.dst, batch.w, batch.valid, src_val,
+                        out_init, kind, use_weight)
 
 
 def direction_choice(

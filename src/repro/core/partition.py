@@ -25,6 +25,7 @@ Edge shards are padded to equal length per device (SPMD static shapes).
 from __future__ import annotations
 
 import dataclasses
+import inspect
 from functools import partial
 from typing import Callable, Tuple
 
@@ -35,6 +36,20 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .graph import Graph, round_up
 from . import operators as ops
+
+# shard_map moved from jax.experimental to the jax namespace (and the
+# replication-check kwarg was renamed check_rep -> check_vma along the way);
+# resolve both at import so the BSP engine runs on either API generation.
+try:
+    _shard_map = jax.shard_map
+except AttributeError:  # older jax: experimental namespace only
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+_SM_CHECK_KWARG = (
+    "check_vma"
+    if "check_vma" in inspect.signature(_shard_map).parameters
+    else "check_rep"
+)
 
 
 @jax.tree_util.register_dataclass
@@ -146,12 +161,12 @@ def make_bsp_step(
             new = labels + acc
         return new, ops.updated_mask(labels, new)
 
-    smapped = jax.shard_map(
+    smapped = _shard_map(
         local_round,
         mesh=mesh,
         in_specs=(P(), P(), P(axes), P(axes), P(axes)),
         out_specs=(P(), P()),
-        check_vma=False,
+        **{_SM_CHECK_KWARG: False},
     )
 
     @jax.jit

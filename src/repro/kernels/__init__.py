@@ -2,5 +2,7 @@
 #   flash_attention — blocked causal/SWA attention (LM archs)
 #   spmm_bsr        — block-sparse SpMM on the MXU (graph pull engine / GCN)
 #   embedding_bag   — scalar-prefetch gather + weighted reduce (recsys/MIND)
+#   graph_ops       — edge-relaxation substrate (push/pull/advance) behind
+#                     core.operators.set_substrate("jnp"|"pallas")
 # Each package: <name>.py (pl.pallas_call + BlockSpec), ops.py (jit wrapper,
 # interpret=True on CPU), ref.py (pure-jnp oracle used by tests).

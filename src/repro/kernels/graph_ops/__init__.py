@@ -1,0 +1,16 @@
+"""Pallas edge-relaxation substrate for the graph engine.
+
+Select it engine-wide with ``repro.core.operators.set_substrate("pallas")``
+(or per call via the ``substrate=`` argument on push/pull/advance/relax).
+"""
+
+from .ops import advance_frontier, edge_relax  # noqa: F401
+from .ref import (  # noqa: F401
+    KINDS,
+    advance_ref,
+    neutral_for,
+    pull_ref,
+    push_ref,
+    relax_ref,
+    scatter_reduce,
+)

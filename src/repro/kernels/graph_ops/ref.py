@@ -1,0 +1,137 @@
+"""Pure-jnp reference semantics for the graph edge-relaxation operators.
+
+This module is the **array-level contract** both substrates implement:
+
+* it takes raw arrays (edge lists, CSC triples, frontier buffers), never the
+  ``Graph``/``SparseFrontier`` containers — the kernel layer must not know
+  about the engine's data structures (same layering as flash_attention
+  taking q/k/v);
+* it is the oracle the Pallas kernels are parity-tested against, and the
+  body of the ``"jnp"`` substrate in ``core/operators.py``.
+
+Reduction kinds: ``min`` / ``max`` (tropical relax, message = v + w),
+``add`` (weighted contribution, message = v * w) and ``or`` (boolean
+reachability; reduced as max over uint8 so duplicate destinations combine
+correctly under scatter).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+KINDS = ("min", "max", "add", "or")
+
+
+def neutral_for(kind: str, dtype) -> jax.Array:
+    """Identity element of the reduction, in the accumulator's dtype."""
+    dtype = jnp.dtype(dtype)
+    if kind == "add":
+        return jnp.zeros((), dtype)
+    if kind == "or":
+        # False / 0: 'or' reduces as max over bool-as-uint8
+        return jnp.zeros((), dtype)
+    if dtype == bool:
+        return jnp.array(kind == "min", dtype)
+    big = jnp.finfo(dtype).max if jnp.issubdtype(dtype, jnp.inexact) else jnp.iinfo(dtype).max
+    low = jnp.finfo(dtype).min if jnp.issubdtype(dtype, jnp.inexact) else jnp.iinfo(dtype).min
+    if kind == "min":
+        return jnp.array(big, dtype)
+    if kind == "max":
+        return jnp.array(low, dtype)
+    raise ValueError(kind)
+
+
+def scatter_reduce(dst, msg, out, kind: str):
+    """Reduce ``msg`` into ``out`` at positions ``dst``."""
+    ref = out.at[dst]
+    if kind == "min":
+        return ref.min(msg)
+    if kind == "max":
+        return ref.max(msg)
+    if kind == "add":
+        return ref.add(msg)
+    if kind == "or":
+        if out.dtype == bool:
+            # scatter-max over uint8: duplicate destinations OR together
+            # (scatter-set would pick an arbitrary duplicate)
+            return (
+                out.astype(jnp.uint8)
+                .at[dst]
+                .max(msg.astype(jnp.uint8))
+                .astype(bool)
+            )
+        return ref.max(msg.astype(out.dtype))
+    raise ValueError(kind)
+
+
+def edge_message(v, w, kind: str, use_weight: bool):
+    """Per-edge message: tropical (v + w) for min/max, scaled (v * w) for
+    add/or; the carried value alone when unweighted."""
+    if not use_weight:
+        return v
+    return v + w if kind in ("min", "max") else v * w
+
+
+def push_ref(src, dst, w, src_val, active, out_init, kind: str = "min",
+             use_weight: bool = True):
+    """Masked push over an edge list: relax every edge whose source is active."""
+    v = src_val[src]
+    msg = edge_message(v, w, kind, use_weight)
+    neutral = neutral_for(kind, out_init.dtype)
+    msg = jnp.where(active[src], msg.astype(out_init.dtype), neutral)
+    return scatter_reduce(dst, msg, out_init, kind)
+
+
+def pull_ref(nbr, dst, w, src_val, active, out_init, kind: str = "min",
+             use_weight: bool = True):
+    """Pull over in-edges grouped by destination (``dst`` sorted ascending):
+    sorted segment reduction merged into ``out_init``."""
+    v = src_val[nbr]
+    msg = edge_message(v, w, kind, use_weight)
+    neutral = neutral_for(kind, out_init.dtype)
+    msg = jnp.where(active[nbr], msg.astype(out_init.dtype), neutral)
+    seg = dict(num_segments=out_init.shape[0], indices_are_sorted=True)
+    if kind == "min":
+        return jnp.minimum(out_init, jax.ops.segment_min(msg, dst, **seg))
+    if kind == "max":
+        return jnp.maximum(out_init, jax.ops.segment_max(msg, dst, **seg))
+    if kind == "add":
+        return out_init + jax.ops.segment_sum(msg, dst, **seg)
+    if kind == "or":
+        red = jax.ops.segment_max(msg.astype(jnp.uint8), dst, **seg)
+        merged = jnp.maximum(out_init.astype(jnp.uint8), red)
+        return merged.astype(out_init.dtype)
+    raise ValueError(kind)
+
+
+def advance_ref(f_idx, f_count, out_deg, row_ptr, col_idx, edge_w,
+                budget: int, sentinel: int, m_pad: int):
+    """Merge-path expansion of a compacted frontier into ``budget`` edge
+    slots.  Returns ``(src, dst, w, valid, total)`` — ``total`` is the true
+    frontier edge mass (overflow check)."""
+    cap = f_idx.shape[0]
+    in_list = jnp.arange(cap) < jnp.minimum(f_count, cap)
+    deg = jnp.where(in_list, out_deg[f_idx], 0)
+    cum = jnp.cumsum(deg)
+    total = cum[-1] if cap > 0 else jnp.int32(0)
+    j = jnp.arange(budget, dtype=jnp.int32)
+    k = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+    k = jnp.clip(k, 0, cap - 1)
+    prev = jnp.where(k > 0, cum[jnp.maximum(k - 1, 0)], 0)
+    u = f_idx[k]
+    e = row_ptr[u] + (j - prev)
+    valid = j < total
+    e = jnp.where(valid, e, m_pad - 1)  # padded edge → sentinel dst, w=0
+    u = jnp.where(valid, u, sentinel)
+    return u, col_idx[e], edge_w[e], valid, total
+
+
+def relax_ref(src, dst, w, valid, src_val, out_init, kind: str = "min",
+              use_weight: bool = True):
+    """Scatter-relax an expanded edge batch (per-edge validity mask)."""
+    v = src_val[src]
+    msg = edge_message(v, w, kind, use_weight)
+    neutral = neutral_for(kind, out_init.dtype)
+    msg = jnp.where(valid, msg.astype(out_init.dtype), neutral)
+    return scatter_reduce(dst, msg, out_init, kind)

@@ -66,6 +66,15 @@ def to_shardings(tree, mesh):
     )
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """``Compiled.cost_analysis()`` returns a per-module dict on newer JAX and
+    a one-element list of dicts on older releases — normalize to the dict."""
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def parse_collective_bytes(hlo_text: str) -> dict:
     """Sum result-shape bytes of every collective op in the (SPMD, per-device)
     HLO.  Result size ≈ operand size for all-reduce / all-to-all / permute;
@@ -122,7 +131,7 @@ def run_cell(arch: str, shape: str, multi_pod: bool, save: bool = True,
         t_compile = time.time() - t0 - t_lower
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = cost_analysis_dict(compiled)
     hlo = compiled.as_text()
     coll = parse_collective_bytes(hlo)
 

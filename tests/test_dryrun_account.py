@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.models import transformer as T
-from repro.launch.dryrun import parse_collective_bytes
+from repro.launch.dryrun import cost_analysis_dict, parse_collective_bytes
 
 
 def _cfg(n_layers, scan):
@@ -30,7 +30,7 @@ def _flops(cfg):
              "labels": jax.ShapeDtypeStruct((2, 32), jnp.int32)}
     fn = lambda p, b: T.loss_fn(p, cfg, b)[0]
     c = jax.jit(jax.grad(fn)).lower(sds, batch).compile()
-    return c.cost_analysis()["flops"]
+    return cost_analysis_dict(c)["flops"]
 
 
 def test_scan_body_counted_once():

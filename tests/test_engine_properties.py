@@ -3,8 +3,12 @@ sparse advance ≡ dense push, compaction, capacity ladders, placement
 interleaving, direction-optimizing switches."""
 
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import from_coo
@@ -136,3 +140,17 @@ def test_bfs_variants_agree(gn, src_seed):
     base = outs["topo"]
     for name, o in outs.items():
         np.testing.assert_allclose(o, base, err_msg=name)
+
+
+@settings(max_examples=15, deadline=None)
+@given(gn=graph_strategy, src_seed=st.integers(0, 2**31 - 1))
+def test_sparse_engine_backend_invariant(gn, src_seed):
+    """Property: end-to-end sparse-ladder BFS and SSSP results are bitwise
+    identical on the jnp and Pallas substrates for arbitrary graphs and
+    sources (min-reductions are order-independent, so any interleaving of
+    blocked kernel scatters must agree exactly)."""
+    from test_graph_ops_parity import check_backend_invariant
+
+    g, n = gn
+    source = int(np.random.default_rng(src_seed).integers(0, n))
+    check_backend_invariant(g, source)

@@ -1,0 +1,207 @@
+"""Substrate parity: the Pallas graph_ops kernels vs the jnp reference.
+
+Every relaxation operator (push / pull / advance+relax) must produce
+**bitwise-identical** results on both substrates, for all four reduction
+kinds, across ragged degree distributions (a hub with degree-1 leaves, an
+empty frontier, ladder overflow → dense fallback).  Test data is
+integer-valued so even the ``add`` reduction is exact in any summation
+order; min/max/or are order-independent outright.
+
+The end-to-end backend-invariance *property* test (random graphs via
+hypothesis) lives in test_engine_properties.py and reuses
+``check_backend_invariant`` from here.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.core import from_coo
+from repro.core import frontier as fr
+from repro.core import operators as ops
+from repro.core.algorithms import bfs, cc, pagerank, sssp
+from repro.graphs import generators as gen
+
+KINDS = ["min", "max", "add", "or"]
+
+
+def hub_and_leaves(n_leaves=70):
+    """Vertex 0 is a hub pointing at every leaf; leaves chain by degree 1 —
+    the skew the merge-path budget assignment exists for."""
+    src = [0] * n_leaves + list(range(1, n_leaves))
+    dst = list(range(1, n_leaves + 1)) + list(range(2, n_leaves + 1))
+    return np.array(src), np.array(dst), n_leaves + 1
+
+
+GRAPHS = {
+    "hub_leaves": hub_and_leaves,
+    "web_like": lambda: gen.web_crawl_like(8, 4, 6, 2, seed=1),
+    "erdos": lambda: gen.erdos(150, 1200, seed=2),
+}
+
+
+def build(name, block=64, csc=True):
+    src, dst, n = GRAPHS[name]()
+    rng = np.random.default_rng(5)
+    w = rng.integers(1, 5, len(src)).astype(np.float32)  # integer-valued
+    return from_coo(src, dst, n, w, block_size=block, build_csc=csc)
+
+
+def vertex_data(g, kind, seed=0):
+    """(src_val, active, out_init) triples; integer-valued floats so 'add'
+    is exact in any order, bool for 'or'."""
+    rng = np.random.default_rng(seed)
+    active = jnp.asarray(rng.random(g.n_pad) < 0.5).at[g.sentinel].set(False)
+    if kind == "or":
+        sv = jnp.asarray(rng.random(g.n_pad) < 0.5)
+        init = jnp.zeros((g.n_pad,), bool)
+        return sv, active, init
+    sv = jnp.asarray(np.rint(rng.normal(size=g.n_pad) * 3).astype(np.float32))
+    fill = {"min": jnp.finfo(jnp.float32).max,
+            "max": jnp.finfo(jnp.float32).min, "add": 0.0}[kind]
+    return sv, active, g.vertex_full(fill, jnp.float32)
+
+
+def assert_bitwise(a, b, what=""):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.dtype == b.dtype, (what, a.dtype, b.dtype)
+    np.testing.assert_array_equal(a, b, err_msg=what)
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("gname", list(GRAPHS))
+def test_push_parity(gname, kind):
+    g = build(gname)
+    sv, active, init = vertex_data(g, kind)
+    use_w = kind != "or"
+    a = ops.push_dense(g, sv, active, init, kind=kind, use_weight=use_w,
+                       substrate="jnp")
+    b = ops.push_dense(g, sv, active, init, kind=kind, use_weight=use_w,
+                       substrate="pallas")
+    assert_bitwise(a, b, f"push/{gname}/{kind}")
+
+
+@pytest.mark.parametrize("kind", KINDS)
+@pytest.mark.parametrize("gname", list(GRAPHS))
+def test_pull_parity(gname, kind):
+    g = build(gname)
+    sv, active, init = vertex_data(g, kind)
+    use_w = kind != "or"
+    a = ops.pull_dense(g, sv, active, init, kind=kind, use_weight=use_w,
+                       substrate="jnp")
+    b = ops.pull_dense(g, sv, active, init, kind=kind, use_weight=use_w,
+                       substrate="pallas")
+    assert_bitwise(a, b, f"pull/{gname}/{kind}")
+
+
+@pytest.mark.parametrize("frontier", ["some", "empty", "overflow"])
+@pytest.mark.parametrize("gname", list(GRAPHS))
+def test_advance_parity(gname, frontier):
+    g = build(gname)
+    rng = np.random.default_rng(3)
+    if frontier == "empty":
+        mask = jnp.zeros((g.n_pad,), bool)
+    elif frontier == "overflow":
+        mask = g.valid_vertex_mask()  # count >> capacity below
+    else:
+        mask = jnp.asarray(rng.random(g.n_pad) < 0.3)
+    cap = g.block_size  # smallest rung: "overflow" genuinely overflows it
+    f = fr.compact(mask, cap, g.sentinel)
+    if frontier == "overflow":
+        assert bool(f.overflowed())
+    for budget in (g.block_size, 4 * g.block_size):
+        a = ops.advance_sparse(g, f, budget, substrate="jnp")
+        b = ops.advance_sparse(g, f, budget, substrate="pallas")
+        for fld in ("src", "dst", "w", "valid", "total"):
+            assert_bitwise(getattr(a, fld), getattr(b, fld),
+                           f"advance/{gname}/{frontier}/{budget}/{fld}")
+        if frontier == "empty":
+            assert int(a.total) == 0 and not bool(jnp.any(a.valid))
+        sv, _, init = vertex_data(g, "min")
+        ra = ops.relax_batch(a, sv, init, kind="min", substrate="jnp")
+        rb = ops.relax_batch(b, sv, init, kind="min", substrate="pallas")
+        assert_bitwise(ra, rb, f"relax/{gname}/{frontier}/{budget}")
+
+
+def run_both(fn):
+    with ops.substrate_scope("jnp"):
+        out_j, stats_j = fn()
+    with ops.substrate_scope("pallas"):
+        out_p, stats_p = fn()
+    assert stats_j.substrate == "jnp" and stats_p.substrate == "pallas"
+    return out_j, out_p
+
+
+def check_backend_invariant(g, source):
+    """End-to-end: sparse-ladder BFS and SSSP (incl. the overflow → dense
+    fallback path) are bitwise backend-invariant.  Reused by the hypothesis
+    property test in test_engine_properties.py."""
+    d_j, d_p = run_both(lambda: bfs.bfs_dd_sparse(g, source))
+    assert_bitwise(d_j, d_p, "bfs_dd_sparse")
+    d_j, d_p = run_both(lambda: sssp.sssp_dd_sparse(g, source))
+    assert_bitwise(d_j, d_p, "sssp_dd_sparse")
+    return np.asarray(d_j)
+
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+def test_e2e_backend_invariant(gname):
+    g = build(gname)
+    check_backend_invariant(g, 0)
+
+
+def test_e2e_dirop_and_cc_backend_invariant():
+    src, dst, n = gen.web_crawl_like(8, 4, 6, 2, seed=4)
+    g = from_coo(src, dst, n, block_size=64, build_csc=True, symmetrize=True)
+    d_j, d_p = run_both(lambda: bfs.bfs_dirop(g, 0))
+    assert_bitwise(d_j, d_p, "bfs_dirop")
+    l_j, l_p = run_both(lambda: cc.cc_labelprop(g))
+    assert_bitwise(l_j, l_p, "cc_labelprop")
+
+
+def test_e2e_pagerank_close_across_backends():
+    """pr_pull reduces with float 'add' on non-integer contributions, so the
+    substrates may differ by summation order — allclose, not bitwise."""
+    src, dst, n = gen.erdos(200, 1600, seed=6)
+    g = from_coo(src, dst, n, block_size=64, build_csc=True)
+    r_j, r_p = run_both(lambda: pagerank.pr_pull(g))
+    np.testing.assert_allclose(np.asarray(r_j), np.asarray(r_p),
+                               rtol=1e-6, atol=1e-9)
+
+
+def test_engine_reuse_retraces_on_substrate_flip():
+    """A reused SparseLadderEngine must drop step caches traced under the
+    previous substrate — otherwise it executes one backend while reporting
+    the other."""
+    from repro.core.engine import SparseLadderEngine
+    from repro.core.algorithms.bfs import _dense_step, _init_dist, _sparse_step
+
+    g = build("web_like")
+    eng = SparseLadderEngine(g, _sparse_step, _dense_step)
+    mask0 = fr.dense_from_indices(jnp.array([0]), g.n_pad).mask
+    with ops.substrate_scope("jnp"):
+        d_j, _ = eng.run(_init_dist(g, 0), mask0)
+        assert eng.stats.substrate == "jnp"
+        compiles_first = eng.stats.compiles
+    with ops.substrate_scope("pallas"):
+        d_p, _ = eng.run(_init_dist(g, 0), mask0)
+        assert eng.stats.substrate == "pallas"
+        assert eng.stats.compiles > compiles_first  # caches were dropped
+    assert_bitwise(d_j, d_p, "engine reuse across substrates")
+
+
+def test_substrate_selection_api():
+    assert ops.get_substrate() == "jnp"
+    ops.set_substrate("pallas")
+    try:
+        assert ops.get_substrate() == "pallas"
+    finally:
+        ops.set_substrate("jnp")
+    with pytest.raises(ValueError):
+        ops.set_substrate("cuda")
+    with ops.substrate_scope("pallas"):
+        assert ops.get_substrate() == "pallas"
+    assert ops.get_substrate() == "jnp"
+    g = build("web_like")
+    with pytest.raises(ValueError):
+        sv, active, init = vertex_data(g, "min")
+        ops.push_dense(g, sv, active, init, substrate="triton")

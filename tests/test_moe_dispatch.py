@@ -2,8 +2,12 @@
 the framework's sparse-worklist machinery applied to token routing."""
 
 import numpy as np
+import pytest
 import jax
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.models.layers import MoEConfig, moe_block, moe_init, swiglu

@@ -7,6 +7,9 @@ import numpy as np
 import pytest
 import jax
 import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.optim import (adamw_init, adamw_update, cosine_schedule,
