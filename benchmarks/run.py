@@ -7,7 +7,7 @@ Prints ``name,us_per_call,derived`` CSV (deliverable d).
   granularity  Fig 4-5/§4.3 block-size ("page size") sweep + churn model
   algo_classes Fig 6-7/§5   algorithm classes × diameter regimes
   frameworks   Fig 8-9/§6.1 framework capability classes
-  scaling      Fig 10/§6.2  strong scaling over devices
+  scaling      Fig 10/§6.2  strong scaling: sharded engine vs BSP baseline
   vs_cluster   Fig 11/§6.3  single machine vs BSP cluster engine
   kernels      —            Pallas kernel µs/call
   roofline     §Roofline    reads experiments/dryrun/*.json

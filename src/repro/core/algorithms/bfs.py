@@ -45,7 +45,7 @@ def bfs_topo(g: Graph, src: int, max_rounds: int = 100_000):
     rounds, (dist, _) = run_dense(
         step_correct, (dist0, jnp.bool_(True)), lambda s: s[1], max_rounds
     )
-    stats = RunStats(rounds=int(rounds), edges_touched=int(rounds) * g.m,
+    stats = RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
                      dense_rounds=int(rounds))
     return dist, stats
 
@@ -63,7 +63,7 @@ def bfs_dd_dense(g: Graph, src: int, max_rounds: int = 100_000):
     rounds, (dist, _) = run_dense(
         step, (dist0, mask0), lambda s: jnp.any(s[1]), max_rounds
     )
-    stats = RunStats(rounds=int(rounds), edges_touched=int(rounds) * g.m,
+    stats = RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
                      dense_rounds=int(rounds))
     return dist, stats
 
@@ -121,7 +121,7 @@ def bfs_dirop(
         lambda s: jnp.any(s[1]),
         max_rounds,
     )
-    stats = RunStats(rounds=int(rounds), edges_touched=int(rounds) * g.m,
+    stats = RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
                      dense_rounds=int(rounds))
     return dist, stats
 

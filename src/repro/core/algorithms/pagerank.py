@@ -45,7 +45,7 @@ def pr_pull(
     rounds, (rank, resid) = run_dense(
         step, (rank0, jnp.float32(jnp.inf)), lambda s: s[1] > tol, max_iters
     )
-    return rank, RunStats(rounds=int(rounds), edges_touched=int(rounds) * g.m,
+    return rank, RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
                           dense_rounds=int(rounds))
 
 
@@ -81,7 +81,7 @@ def pr_push(
     )
     rank = rank + resid  # fold in the leftover residual
     rank = jnp.where(valid, rank / jnp.sum(rank), 0.0)
-    return rank, RunStats(rounds=int(rounds), edges_touched=int(rounds) * g.m,
+    return rank, RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
                           dense_rounds=int(rounds))
 
 

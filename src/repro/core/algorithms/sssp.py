@@ -43,7 +43,7 @@ def sssp_bellman_ford(g: Graph, src: int, max_rounds: int = 100_000):
     rounds, (dist, _) = run_dense(
         step, (dist0, jnp.bool_(True)), lambda s: s[1], max_rounds
     )
-    return dist, RunStats(rounds=int(rounds), edges_touched=int(rounds) * g.m,
+    return dist, RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
                           dense_rounds=int(rounds))
 
 
@@ -59,7 +59,7 @@ def sssp_dd_dense(g: Graph, src: int, max_rounds: int = 100_000):
     rounds, (dist, _) = run_dense(
         step, (dist0, mask0), lambda s: jnp.any(s[1]), max_rounds
     )
-    return dist, RunStats(rounds=int(rounds), edges_touched=int(rounds) * g.m,
+    return dist, RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
                           dense_rounds=int(rounds))
 
 
@@ -151,7 +151,7 @@ def sssp_delta(
         outer_body, (dist0, pending0, jnp.int32(0), jnp.int32(0)),
         outer_cond, max_outer,
     )
-    return dist, RunStats(rounds=int(rounds), edges_touched=int(inner_total) * g.m,
+    return dist, RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(inner_total) * g.m,
                           dense_rounds=int(inner_total))
 
 

@@ -42,8 +42,22 @@ class RunStats:
     dense_rounds: int = 0
     sparse_rounds: int = 0
     compiles: int = 0
+    # sparse rung couldn't cover the frontier's edge mass → the engine fell
+    # back to the dense step for that round (edges are never dropped)
+    overflow_escalations: int = 0
+    # execution geometry: device count and placement policy of the graph the
+    # run executed on (1/"local" for an unsharded Graph)
+    ndev: int = 1
+    placement: str = "local"
     # relaxation backend the run lowered through (operators.get_substrate())
     substrate: str = dataclasses.field(default_factory=ops.get_substrate)
+
+    @classmethod
+    def from_graph(cls, g, **kw) -> "RunStats":
+        """Stats pre-filled with the graph's execution geometry (works for
+        both ``Graph`` and ``sharded.ShardedGraph``)."""
+        return cls(ndev=getattr(g, "ndev", 1),
+                   placement=getattr(g, "placement", "local"), **kw)
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -85,19 +99,45 @@ class SparseLadderEngine:
     ):
         self.g = g
         self.cap_ladder = fr.ladder_capacities(g.n_pad, g.block_size, ladder_base)
-        self.budget_ladder = fr.ladder_capacities(g.m_pad, g.block_size, ladder_base)
+        # budgets are per merge-path expansion: per-device on a sharded
+        # graph (each shard expands the frontier over its own epd edges),
+        # whole-graph otherwise
+        shard_edges = getattr(g, "epd", g.m_pad)
+        self.budget_ladder = fr.ladder_capacities(shard_edges, g.block_size,
+                                                  ladder_base)
         self.budget_factor = budget_factor
         self._sparse = {}
         self._dense = None
         self._sparse_fn = sparse_step
         self._dense_fn = dense_step
-        self.stats = RunStats()
+        self.stats = RunStats.from_graph(g)
+
+    def _pinned_jit(self, fn, static_argnames=()):
+        """jit ``fn`` with the current substrate / deterministic-add mode
+        pinned into the trace.
+
+        The pinning closure is created fresh per cache entry on purpose:
+        JAX shares trace caches across ``jax.jit`` wrappers of the *same*
+        function object, so re-wrapping ``self._sparse_fn`` after a
+        substrate flip would silently reuse the old backend's trace (while
+        RunStats reported the new one).  A fresh closure has fresh identity,
+        and re-entering the scopes at trace time makes the step read the
+        mode it was cached under, not whatever is globally current.
+        """
+        sub = ops.get_substrate()
+        det = ops.get_deterministic_add()
+
+        def step(*args, **kwargs):
+            with ops.substrate_scope(sub), ops.deterministic_add_scope(det):
+                return fn(*args, **kwargs)
+
+        return jax.jit(step, static_argnames=static_argnames)
 
     def _get_sparse(self, cap: int, budget: int):
         key = (cap, budget)
         if key not in self._sparse:
             self.stats.compiles += 1
-            self._sparse[key] = jax.jit(
+            self._sparse[key] = self._pinned_jit(
                 self._sparse_fn, static_argnames=("capacity", "budget")
             )
         return self._sparse[key]
@@ -105,17 +145,20 @@ class SparseLadderEngine:
     def _get_dense(self):
         if self._dense is None:
             self.stats.compiles += 1
-            self._dense = jax.jit(self._dense_fn)
+            self._dense = self._pinned_jit(self._dense_fn)
         return self._dense
 
     def run(self, labels, mask, max_rounds: int = 10_000):
         g = self.g
-        # cached steps were traced under the substrate active at trace time;
-        # if the engine-wide selection changed since, drop them so the run
-        # actually executes (and reports) the current backend
-        if ops.get_substrate() != self.stats.substrate:
+        # cached steps were pinned to the (substrate, deterministic-add)
+        # mode active when they were jitted; if the engine-wide selection
+        # changed since, drop them so the run actually executes (and
+        # reports) the current backend
+        mode = (ops.get_substrate(), ops.get_deterministic_add())
+        if mode != getattr(self, "_traced_mode", None):
             self._sparse = {}
             self._dense = None
+        self._traced_mode = mode
         self.stats.substrate = ops.get_substrate()
         # max sparse budget: don't bother with sparse when it costs ~ dense
         sparse_cutoff = self.budget_ladder[-1] // 2
@@ -125,10 +168,17 @@ class SparseLadderEngine:
                 break
             self.stats.rounds += 1
             cap = fr.pick_capacity(count, self.cap_ladder)
-            # edge mass of the frontier decides budget / fallback
-            edge_mass = int(jnp.sum(jnp.where(mask, g.out_deg, 0)))
+            # (max per-shard) edge mass of the frontier decides budget/fallback
+            edge_mass = int(g.budget_edge_mass(mask))
             budget = fr.pick_capacity(max(edge_mass, 1), self.budget_ladder)
-            if edge_mass > sparse_cutoff:
+            # a rung that cannot hold the frontier (vertices or edges) would
+            # silently drop work — escalate to the dense step instead.
+            # Unreachable when pick_capacity honours the ladder contract
+            # (rung >= requested); kept as the overflow backstop.
+            overflow = budget < edge_mass or cap < count
+            if overflow and edge_mass <= sparse_cutoff:
+                self.stats.overflow_escalations += 1
+            if edge_mass > sparse_cutoff or overflow:
                 labels, mask = self._get_dense()(g, labels, mask)
                 self.stats.dense_rounds += 1
                 self.stats.edges_touched += g.m
@@ -137,5 +187,5 @@ class SparseLadderEngine:
                     g, labels, mask, capacity=cap, budget=budget
                 )
                 self.stats.sparse_rounds += 1
-                self.stats.edges_touched += budget
+                self.stats.edges_touched += budget * self.stats.ndev
         return labels, mask

@@ -97,6 +97,12 @@ class Graph:
     def valid_vertex_mask(self) -> jax.Array:
         return jnp.arange(self.n_pad) < self.n
 
+    def budget_edge_mass(self, mask: jax.Array) -> jax.Array:
+        """Frontier edge mass a sparse-advance budget must cover.  On a
+        single partition that is the whole frontier's out-degree sum; the
+        sharded container overrides this with the max per-shard mass."""
+        return jnp.sum(jnp.where(mask, self.out_deg, 0))
+
 
 def from_coo(
     src: np.ndarray,

@@ -23,17 +23,38 @@ Every relaxation op lowers through a selectable **substrate**:
   (``interpret=True`` on CPU; real lowering on accelerators).
 
 Select globally with ``set_substrate("pallas")`` / the ``substrate_scope``
-context manager, or per call via the ``substrate=`` argument.  Algorithms
-and engines run unmodified on either; ``RunStats.substrate`` records which
-one a run used.  The selection is read at trace time, so don't flip it
-under a cached jitted step (each ``SparseLadderEngine`` instance and each
-``run_dense`` call traces afresh, which is why those run unmodified).
+context manager, or per call via the ``substrate=`` argument.  The
+process-wide default comes from the ``REPRO_SUBSTRATE`` env var (CI runs
+the tier-1 suite under both).  Algorithms and engines run unmodified on
+either; ``RunStats.substrate`` records which one a run used.  The selection
+is read at trace time, so don't flip it under a cached jitted step of your
+own.  ``run_dense`` traces its while_loop at every call, and
+``SparseLadderEngine`` pins the mode into each cached step via a fresh
+closure and re-pins when the selection flips (JAX shares trace caches
+across ``jit`` wrappers of the same function object, so merely re-jitting
+a module-level step would silently reuse the old backend's trace) — which
+is why those run unmodified.
+
+Two orthogonal execution modes layer on top of the substrate seam:
+
+* **Sharded dispatch** — handing any relaxation op a
+  ``sharded.ShardedGraph`` (or ``ShardedEdgeBatch``) routes it through the
+  shard_map path in ``core/sharded.py``: shard-local relax through the
+  selected substrate, then a cross-device label reduction.
+* **Deterministic ``add``** — ``set_deterministic_add(True)`` /
+  ``deterministic_add_scope()`` makes every ``kind="add"`` reduction use
+  one fixed-order segmented tree reduction (``graph_ops.det_scatter_add``)
+  on *both* substrates, so float accumulations (pagerank) are bitwise
+  reproducible across backends.  Costs a stable sort per relax; off by
+  default.  Not yet applied under sharded dispatch, where per-shard psum
+  order still depends on the partition (see ROADMAP).
 """
 
 from __future__ import annotations
 
 import contextlib
 import dataclasses
+import os
 from typing import Tuple
 
 import jax
@@ -45,7 +66,12 @@ from .frontier import DenseFrontier, SparseFrontier
 from .graph import Graph
 
 SUBSTRATES = ("jnp", "pallas")
-_substrate = "jnp"
+DEFAULT_SUBSTRATE = os.environ.get("REPRO_SUBSTRATE", "jnp")
+if DEFAULT_SUBSTRATE not in SUBSTRATES:
+    raise ValueError(
+        f"REPRO_SUBSTRATE={DEFAULT_SUBSTRATE!r} is not one of {SUBSTRATES}")
+_substrate = DEFAULT_SUBSTRATE
+_deterministic_add = False
 
 
 def set_substrate(name: str) -> None:
@@ -79,6 +105,28 @@ def _resolve(substrate) -> str:
     return substrate
 
 
+def set_deterministic_add(on: bool) -> None:
+    """Route every ``kind="add"`` relaxation (all substrates) through the
+    fixed-order segmented tree reduction so float sums are bitwise
+    backend-reproducible.  Read at trace time, like the substrate."""
+    global _deterministic_add
+    _deterministic_add = bool(on)
+
+
+def get_deterministic_add() -> bool:
+    return _deterministic_add
+
+
+@contextlib.contextmanager
+def deterministic_add_scope(on: bool = True):
+    prev = _deterministic_add
+    set_deterministic_add(on)
+    try:
+        yield
+    finally:
+        set_deterministic_add(prev)
+
+
 def push_dense(
     g: Graph,
     src_val: jax.Array,
@@ -96,7 +144,14 @@ def push_dense(
     Message is ``src_val[src] + w`` for min/max ("tropical" relax) and
     ``src_val[src] * w`` for add (weighted contribution).
     """
-    if _resolve(substrate) == "pallas":
+    sub = _resolve(substrate)
+    sharded = getattr(g, "sharded_push_dense", None)
+    if sharded is not None:
+        return sharded(src_val, active, out_init, kind, use_weight, sub)
+    if kind == "add" and _deterministic_add:
+        return gk.det_push_ref(g.src_idx, g.col_idx, g.edge_w, src_val,
+                               active, out_init, use_weight)
+    if sub == "pallas":
         return gk.edge_relax(
             g.src_idx, g.col_idx, g.edge_w, active, src_val, out_init,
             kind=kind, use_weight=use_weight, vertex_mask=True,
@@ -118,8 +173,16 @@ def pull_dense(
     in-neighbours.  Requires CSC.  The jnp substrate uses sorted segment ops
     (in-edges are grouped by destination, ``indices_are_sorted=True``); the
     Pallas substrate walks the same dst-sorted edge blocks."""
+    sub = _resolve(substrate)
+    sharded = getattr(g, "sharded_pull_dense", None)
+    if sharded is not None:
+        return sharded(src_val, active, out_init, kind, use_weight, sub)
     assert g.has_csc, "pull_dense requires build_csc=True"
-    if _resolve(substrate) == "pallas":
+    if kind == "add" and _deterministic_add:
+        # pull ≡ push over the in-edge list (nbr → dst); same fixed order
+        return gk.det_push_ref(g.in_col_idx, g.in_src_idx, g.in_edge_w,
+                               src_val, active, out_init, use_weight)
+    if sub == "pallas":
         return gk.edge_relax(
             g.in_col_idx, g.in_src_idx, g.in_edge_w, active, src_val,
             out_init, kind=kind, use_weight=use_weight, vertex_mask=True,
@@ -143,8 +206,17 @@ class EdgeBatch:
 def advance_sparse(
     g: Graph, f: SparseFrontier, budget: int, substrate: str | None = None
 ) -> EdgeBatch:
-    """Merge-path expansion of a sparse frontier into ≤ budget edge slots."""
-    if _resolve(substrate) == "pallas":
+    """Merge-path expansion of a sparse frontier into ≤ budget edge slots.
+
+    On a ``ShardedGraph`` the budget is **per shard**: every device expands
+    the (replicated) frontier over its own edge shard, returning a
+    ``ShardedEdgeBatch`` of (D, budget) slots.
+    """
+    sub = _resolve(substrate)
+    sharded = getattr(g, "sharded_advance", None)
+    if sharded is not None:
+        return sharded(f, budget, sub)
+    if sub == "pallas":
         src, dst, w, valid, total = gk.advance_frontier(
             f.idx, f.count, g.out_deg, g.row_ptr, g.col_idx, g.edge_w,
             budget=budget, sentinel=g.sentinel, m_pad=g.m_pad,
@@ -167,7 +239,14 @@ def relax_batch(
     substrate: str | None = None,
 ) -> jax.Array:
     """Apply a relaxation over an EdgeBatch (sparse counterpart of push_dense)."""
-    if _resolve(substrate) == "pallas":
+    sub = _resolve(substrate)
+    sharded = getattr(batch, "sharded_relax", None)
+    if sharded is not None:
+        return sharded(src_val, out_init, kind, use_weight, sub)
+    if kind == "add" and _deterministic_add:
+        return gk.det_relax_ref(batch.src, batch.dst, batch.w, batch.valid,
+                                src_val, out_init, use_weight)
+    if sub == "pallas":
         return gk.edge_relax(
             batch.src, batch.dst, batch.w, batch.valid, src_val, out_init,
             kind=kind, use_weight=use_weight, vertex_mask=False,

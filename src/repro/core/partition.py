@@ -36,6 +36,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .graph import Graph, round_up
 from . import operators as ops
+from . import placement as pl
 
 # shard_map moved from jax.experimental to the jax namespace (and the
 # replication-check kwarg was renamed check_rep -> check_vma along the way);
@@ -55,69 +56,105 @@ _SM_CHECK_KWARG = (
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
 class PartitionedGraph:
-    """Edge-partitioned graph: (D, epd) edge arrays, device-major."""
+    """Edge-partitioned graph: (D, epd) edge arrays, device-major.
+
+    Each shard's edge slots are kept in shard-local CSR order (sorted by
+    ``(src, dst)``), and ``row_ptr``/``deg`` carry the shard-local CSR
+    offsets and per-vertex degrees over *global* vertex ids.  The BSP engine
+    below ignores them; the sharded operator path (``core/sharded.py``)
+    needs them so each device can merge-path-expand a sparse frontier over
+    its own edges — the shard metadata is the open interface, not the
+    closed BSP step.  (For ``direction="in"`` partitions the CSR metadata
+    is keyed by the in-neighbour and only the flat edge lists are used.)
+    """
 
     n: int = dataclasses.field(metadata=dict(static=True))
     n_pad: int = dataclasses.field(metadata=dict(static=True))
     ndev: int = dataclasses.field(metadata=dict(static=True))
     epd: int = dataclasses.field(metadata=dict(static=True))  # edges per device
     scheme: str = dataclasses.field(metadata=dict(static=True))  # "oec" | "cvc"
+    policy: str = dataclasses.field(metadata=dict(static=True))  # shard homing
 
-    src: jax.Array     # (D, epd) int32, sentinel-padded
+    src: jax.Array     # (D, epd) int32, sentinel-padded, shard-local CSR order
     dst: jax.Array     # (D, epd)
     w: jax.Array       # (D, epd)
     out_deg: jax.Array  # (n_pad,) global out-degrees (replicated)
+    row_ptr: jax.Array  # (D, n_pad + 1) shard-local CSR offsets
+    deg: jax.Array      # (D, n_pad) shard-local per-vertex degree
 
     @property
     def sentinel(self) -> int:
         return self.n_pad - 1
 
 
-def _assemble(shards, n, n_pad, out_deg, scheme) -> PartitionedGraph:
+def _assemble(shards, n, n_pad, out_deg, scheme, policy) -> PartitionedGraph:
     ndev = len(shards)
+    sentinel = n_pad - 1
     epd = round_up(max(max(len(s[0]) for s in shards), 1), 8)
-    S = np.full((ndev, epd), n_pad - 1, np.int32)
-    D = np.full((ndev, epd), n_pad - 1, np.int32)
+    S = np.full((ndev, epd), sentinel, np.int32)
+    D = np.full((ndev, epd), sentinel, np.int32)
     W = np.zeros((ndev, epd), np.float32)
+    RP = np.zeros((ndev, n_pad + 1), np.int32)
+    DEG = np.zeros((ndev, n_pad), np.int32)
     for i, (s, d, w) in enumerate(shards):
+        order = np.lexsort((d, s))  # shard-local CSR order
+        s, d, w = s[order], d[order], w[order]
         S[i, : len(s)] = s
         D[i, : len(d)] = d
         W[i, : len(w)] = w
+        counts = np.bincount(s, minlength=n_pad).astype(np.int32)
+        counts[sentinel] = 0
+        DEG[i] = counts
+        np.cumsum(counts, out=RP[i, 1:])
     return PartitionedGraph(
-        n=n, n_pad=n_pad, ndev=ndev, epd=epd, scheme=scheme,
+        n=n, n_pad=n_pad, ndev=ndev, epd=epd, scheme=scheme, policy=policy,
         src=jnp.asarray(S), dst=jnp.asarray(D), w=jnp.asarray(W),
         out_deg=jnp.asarray(out_deg),
+        row_ptr=jnp.asarray(RP), deg=jnp.asarray(DEG),
     )
 
 
-def partition_1d(g: Graph, ndev: int) -> PartitionedGraph:
-    """OEC: device owns out-edges of its contiguous vertex range."""
+def _edge_arrays(g: Graph, direction: str):
+    if direction == "in":
+        assert g.has_csc, "direction='in' requires build_csc=True"
+        # in-edge list: (in-neighbour, destination, weight); owner-computes
+        # homes an in-edge with its *destination*
+        return (np.asarray(g.in_col_idx)[: g.m], np.asarray(g.in_src_idx)[: g.m],
+                np.asarray(g.in_edge_w)[: g.m], np.asarray(g.in_src_idx)[: g.m])
     src = np.asarray(g.src_idx)[: g.m]
-    dst = np.asarray(g.col_idx)[: g.m]
-    w = np.asarray(g.edge_w)[: g.m]
-    per = round_up(g.n_pad, ndev) // ndev
-    owner = np.minimum(src // per, ndev - 1)
+    return src, np.asarray(g.col_idx)[: g.m], np.asarray(g.edge_w)[: g.m], src
+
+
+def partition_1d(
+    g: Graph, ndev: int, policy: str = "blocked", direction: str = "out"
+) -> PartitionedGraph:
+    """1-D edge cut: device owns the out-edges of its vertex range (OEC; the
+    paper uses it for 5–20 hosts).  ``policy`` picks the placement.py homing
+    rule (blocked ranges / interleaved blocks / all-local); ``direction="in"``
+    cuts the CSC in-edge list by destination instead (pull direction)."""
+    src, dst, w, own_key = _edge_arrays(g, direction)
+    owner = pl.shard_owner(own_key, g.n_pad, g.block_size, ndev, policy)
     shards = [
         (src[owner == i], dst[owner == i], w[owner == i]) for i in range(ndev)
     ]
-    return _assemble(shards, g.n, g.n_pad, np.asarray(g.out_deg), "oec")
+    return _assemble(shards, g.n, g.n_pad, np.asarray(g.out_deg), "oec", policy)
 
 
-def partition_2d(g: Graph, rows: int, cols: int) -> PartitionedGraph:
+def partition_2d(
+    g: Graph, rows: int, cols: int, policy: str = "blocked"
+) -> PartitionedGraph:
     """CVC on an (rows, cols) grid, flattened device-major (row*cols + col)."""
     src = np.asarray(g.src_idx)[: g.m]
     dst = np.asarray(g.col_idx)[: g.m]
     w = np.asarray(g.edge_w)[: g.m]
-    rper = round_up(g.n_pad, rows) // rows
-    cper = round_up(g.n_pad, cols) // cols
-    r = np.minimum(src // rper, rows - 1)
-    c = np.minimum(dst // cper, cols - 1)
+    r = pl.shard_owner(src, g.n_pad, g.block_size, rows, policy)
+    c = pl.shard_owner(dst, g.n_pad, g.block_size, cols, policy)
     owner = r * cols + c
     shards = [
         (src[owner == i], dst[owner == i], w[owner == i])
         for i in range(rows * cols)
     ]
-    return _assemble(shards, g.n, g.n_pad, np.asarray(g.out_deg), "cvc")
+    return _assemble(shards, g.n, g.n_pad, np.asarray(g.out_deg), "cvc", policy)
 
 
 # ---------------------------------------------------------------------------

@@ -41,6 +41,30 @@ def _num_devices(mesh: Mesh, axes) -> int:
     return int(np.prod([mesh.shape[a] for a in axes]))
 
 
+def shard_owner(
+    vertex: np.ndarray, n_pad: int, block_size: int, ndev: int, policy: Policy
+) -> np.ndarray:
+    """Policy-aware shard homing: which device owns a vertex's edges.
+
+    This is the placement layer's hook into the graph partitioner
+    (``partition.partition_1d``/``partition_2d``): the same three policies
+    that lay arrays over the mesh decide which shard a vertex's edges live
+    on.  ``local`` homes everything on device 0 (the pathological §4
+    baseline), ``blocked`` gives contiguous vertex ranges (owner-computes
+    OEC), ``interleaved`` deals vertex *blocks* round-robin (never below
+    ``block_size`` granularity — the huge-page rule P2).
+    """
+    vertex = np.asarray(vertex, dtype=np.int64)
+    if policy == "local" or ndev == 1:
+        return np.zeros(vertex.shape, np.int64)
+    if policy == "interleaved":
+        return (vertex // block_size) % ndev
+    if policy == "blocked":
+        per = -(-n_pad // ndev)  # ceil: matches the contiguous-range OEC cut
+        return np.minimum(vertex // per, ndev - 1)
+    raise ValueError(f"unknown placement policy {policy!r}")
+
+
 def interleave_blocks(x: jax.Array, block_size: int, ndev: int) -> jax.Array:
     """Permute blocks so contiguous sharding realises round-robin placement.
 

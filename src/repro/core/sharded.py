@@ -1,0 +1,327 @@
+"""Sharded execution path for the single-machine engine.
+
+``shard_graph`` turns a :class:`~repro.core.graph.Graph` into a
+:class:`ShardedGraph`: per-device edge shards produced by
+``partition_1d``/``partition_2d``, homed by a ``placement.py`` policy
+(``local`` / ``interleaved`` / ``blocked``), plus the shard-local CSR
+metadata the sparse operators need.  ``core.operators`` dispatches
+``push_dense`` / ``pull_dense`` / ``advance_sparse`` / ``relax_batch`` to
+the methods here whenever it is handed a ``ShardedGraph``, so
+``SparseLadderEngine`` and ``run_dense`` — **including sparse worklists and
+merge-path budgets, which the BSP baseline cannot express** — run
+unmodified on a D-device mesh.
+
+Every sharded relaxation has the same three-phase structure:
+
+1. **shard-local relax** through the selected substrate (jnp reference ops
+   or the Pallas kernels — the same kernel seam as the single-device path)
+   into a neutral-initialised accumulator;
+2. **cross-device label reduction** (``pmin``/``pmax``/``psum`` — the
+   Gluon-style mirror sync, but applied per *operator*, not per BSP round);
+3. **merge** with the caller's ``out_init``, reusing the reduction-kind
+   semantics of ``kernels.graph_ops.scatter_reduce``.
+
+``min`` / ``max`` / ``or`` reductions are order-independent, so sharded
+results are **bitwise identical** to the single-device jnp reference for
+any (substrate, placement, ndev) cell — ``tests/test_sharded_invariance.py``
+pins exactly that.  Float ``add`` results depend on the shard partition
+(per-shard sums are ``psum``'d in mesh order), which the single-device
+deterministic-add mode does not yet cover; see ROADMAP.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..kernels import graph_ops as gk
+from .frontier import SparseFrontier
+from .graph import Graph
+from .partition import (_SM_CHECK_KWARG, _shard_map, PartitionedGraph,
+                        partition_1d, partition_2d)
+
+
+def _local_relax(src, dst, w, mask, src_val, neutral_init, kind, use_weight,
+                 vertex_mask, substrate):
+    """One shard's relaxation through the substrate seam (PR 1 kernels)."""
+    if substrate == "pallas":
+        return gk.edge_relax(src, dst, w, mask, src_val, neutral_init,
+                             kind=kind, use_weight=use_weight,
+                             vertex_mask=vertex_mask)
+    if vertex_mask:
+        return gk.push_ref(src, dst, w, src_val, mask, neutral_init, kind,
+                           use_weight)
+    return gk.relax_ref(src, dst, w, mask, src_val, neutral_init, kind,
+                        use_weight)
+
+
+def _cross_reduce(acc, axes, kind):
+    """Reduce per-shard accumulators to canonical labels on every device."""
+    if kind == "min":
+        return jax.lax.pmin(acc, axes)
+    if kind == "max":
+        return jax.lax.pmax(acc, axes)
+    if kind == "or":
+        if acc.dtype == jnp.bool_:
+            return jax.lax.pmax(acc.astype(jnp.uint8), axes).astype(bool)
+        return jax.lax.pmax(acc, axes)
+    if kind == "add":
+        return jax.lax.psum(acc, axes)
+    raise ValueError(kind)
+
+
+def _merge(out_init, acc, kind):
+    """Fold the reduced accumulator into the caller's out_init — the same
+    merge ``scatter_reduce`` performs on a single device."""
+    if kind == "min":
+        return jnp.minimum(out_init, acc)
+    if kind == "max":
+        return jnp.maximum(out_init, acc)
+    if kind == "or":
+        if out_init.dtype == jnp.bool_:
+            return out_init | acc
+        return jnp.maximum(out_init, acc.astype(out_init.dtype))
+    if kind == "add":
+        return out_init + acc
+    raise ValueError(kind)
+
+
+def _edge_scatter(mesh, axes, e_src, e_dst, e_w, src_val, mask, out_init,
+                  kind, use_weight, substrate, vertex_mask=True):
+    """shard_map a relaxation over (D, epd) edge shards.
+
+    ``mask`` is the replicated (n_pad,) active-vertex bitmap when
+    ``vertex_mask``, else a per-edge (D, epd) validity mask sharded with
+    the edges.
+    """
+    neutral = gk.neutral_for(kind, out_init.dtype)
+
+    def local(vals, msk, out0, s, d, w):
+        s, d, w = s[0], d[0], w[0]
+        m = msk if vertex_mask else msk[0]
+        acc = _local_relax(s, d, w, m, vals, jnp.full_like(out0, neutral),
+                           kind, use_weight, vertex_mask, substrate)
+        return _merge(out0, _cross_reduce(acc, axes, kind), kind)
+
+    mask_spec = P() if vertex_mask else P(axes)
+    fn = _shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), mask_spec, P(), P(axes), P(axes), P(axes)),
+        out_specs=P(), **{_SM_CHECK_KWARG: False},
+    )
+    return fn(src_val, mask, out_init, e_src, e_dst, e_w)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedEdgeBatch:
+    """Sparse advance result on a mesh: ``budget`` edge slots *per shard*.
+
+    ``totals`` is per-shard true frontier edge mass; ``total`` (the global
+    overflow check, mirroring ``EdgeBatch.total``) is their sum.
+    """
+
+    mesh: Mesh = dataclasses.field(metadata=dict(static=True))
+    axes: Tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+    src: jax.Array      # (D, budget) int32
+    dst: jax.Array      # (D, budget)
+    w: jax.Array        # (D, budget)
+    valid: jax.Array    # (D, budget) bool
+    totals: jax.Array   # (D,) int32
+
+    @property
+    def total(self) -> jax.Array:
+        return jnp.sum(self.totals).astype(jnp.int32)
+
+    def sharded_relax(self, src_val, out_init, kind, use_weight, substrate):
+        return _edge_scatter(self.mesh, self.axes, self.src, self.dst, self.w,
+                             src_val, self.valid, out_init, kind, use_weight,
+                             substrate, vertex_mask=False)
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class ShardedGraph:
+    """Edge-sharded graph that quacks like ``Graph`` for the engines.
+
+    Carries (D, epd) edge shards in shard-local CSR order plus per-shard
+    CSR metadata (``shard_row_ptr``/``shard_deg`` over global vertex ids),
+    so each device can expand a sparse frontier over its own edges.  Vertex
+    arrays (labels, degrees, masks) stay replicated — they are the lookup
+    side of the gathers, same rule as ``placement.place_graph``.
+    """
+
+    # static metadata
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+    n_pad: int = dataclasses.field(metadata=dict(static=True))
+    block_size: int = dataclasses.field(metadata=dict(static=True))
+    ndev: int = dataclasses.field(metadata=dict(static=True))
+    epd: int = dataclasses.field(metadata=dict(static=True))
+    scheme: str = dataclasses.field(metadata=dict(static=True))
+    placement: str = dataclasses.field(metadata=dict(static=True))
+    axes: Tuple[str, ...] = dataclasses.field(metadata=dict(static=True))
+    mesh: Mesh = dataclasses.field(metadata=dict(static=True))
+
+    # CSR out-edge shards (push direction / sparse advance)
+    src: jax.Array            # (D, epd) int32, sentinel-padded
+    dst: jax.Array            # (D, epd)
+    w: jax.Array              # (D, epd)
+    shard_row_ptr: jax.Array  # (D, n_pad + 1)
+    shard_deg: jax.Array      # (D, n_pad)
+    out_deg: jax.Array        # (n_pad,) global (replicated)
+
+    # in-edge shards (pull direction) — optional
+    in_nbr: Optional[jax.Array] = None   # (D, epd_in) in-neighbour
+    in_dst: Optional[jax.Array] = None   # (D, epd_in) destination
+    in_w: Optional[jax.Array] = None     # (D, epd_in)
+
+    # ---- Graph-compatible surface -------------------------------------
+    @property
+    def sentinel(self) -> int:
+        return self.n_pad - 1
+
+    @property
+    def m_pad(self) -> int:
+        return self.ndev * self.epd
+
+    @property
+    def has_csc(self) -> bool:
+        return self.in_nbr is not None
+
+    def vertex_full(self, fill, dtype) -> jax.Array:
+        return jnp.full((self.n_pad,), fill, dtype=dtype)
+
+    def valid_vertex_mask(self) -> jax.Array:
+        return jnp.arange(self.n_pad) < self.n
+
+    # flat views so non-operator algorithms (pointer-jump CC, delta-stepping)
+    # run unmodified: the concatenated shards are the same edge multiset as
+    # the original CSR arrays, sentinel-padded per shard
+    @property
+    def src_idx(self) -> jax.Array:
+        return self.src.reshape(-1)
+
+    @property
+    def col_idx(self) -> jax.Array:
+        return self.dst.reshape(-1)
+
+    @property
+    def edge_w(self) -> jax.Array:
+        return self.w.reshape(-1)
+
+    def budget_edge_mass(self, mask: jax.Array) -> jax.Array:
+        """Max *per-shard* frontier edge mass — what a per-shard merge-path
+        budget must cover (the global mass is what a single device needs)."""
+        per = jnp.sum(jnp.where(mask[None, :], self.shard_deg, 0), axis=1)
+        return jnp.max(per)
+
+    # ---- sharded operator implementations (operators.py dispatch) -----
+    def sharded_push_dense(self, src_val, active, out_init, kind, use_weight,
+                           substrate):
+        return _edge_scatter(self.mesh, self.axes, self.src, self.dst, self.w,
+                             src_val, active, out_init, kind, use_weight,
+                             substrate, vertex_mask=True)
+
+    def sharded_pull_dense(self, src_val, active, out_init, kind, use_weight,
+                           substrate):
+        assert self.has_csc, "pull on a ShardedGraph needs shard_graph(g) " \
+                             "with build_csc=True on the source Graph"
+        return _edge_scatter(self.mesh, self.axes, self.in_nbr, self.in_dst,
+                             self.in_w, src_val, active, out_init, kind,
+                             use_weight, substrate, vertex_mask=True)
+
+    def sharded_advance(self, f: SparseFrontier, budget: int, substrate):
+        """Merge-path expansion of a replicated frontier, per shard: each
+        device binary-searches its own shard-local degree sums, so the
+        ``budget`` edge slots are per-device (the ladder rung is per-shard).
+        """
+        epd, sent = self.epd, self.sentinel
+
+        def local(idx, count, deg, rp, ci, w):
+            deg, rp, ci, w = deg[0], rp[0], ci[0], w[0]
+            adv = gk.advance_frontier if substrate == "pallas" else gk.advance_ref
+            s, d, ww, v, t = adv(idx, count, deg, rp, ci, w,
+                                 budget=budget, sentinel=sent, m_pad=epd)
+            t = jnp.asarray(t, jnp.int32).reshape(1)
+            return s[None], d[None], ww[None], v[None], t
+
+        fn = _shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(), P(), P(self.axes), P(self.axes), P(self.axes),
+                      P(self.axes)),
+            out_specs=(P(self.axes),) * 5, **{_SM_CHECK_KWARG: False},
+        )
+        s, d, w, v, totals = fn(f.idx, f.count, self.shard_deg,
+                                self.shard_row_ptr, self.dst, self.w)
+        return ShardedEdgeBatch(mesh=self.mesh, axes=self.axes, src=s, dst=d,
+                                w=w, valid=v, totals=totals)
+
+
+def _num_devices(mesh: Mesh, axes) -> int:
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _home(sg: ShardedGraph) -> ShardedGraph:
+    """Device-put shard arrays one-per-device, vertex arrays replicated."""
+    edge = NamedSharding(sg.mesh, P(sg.axes))
+    rep = NamedSharding(sg.mesh, P())
+    fields = dict(
+        src=jax.device_put(sg.src, edge),
+        dst=jax.device_put(sg.dst, edge),
+        w=jax.device_put(sg.w, edge),
+        shard_row_ptr=jax.device_put(sg.shard_row_ptr, edge),
+        shard_deg=jax.device_put(sg.shard_deg, edge),
+        out_deg=jax.device_put(sg.out_deg, rep),
+    )
+    if sg.has_csc:
+        fields.update(
+            in_nbr=jax.device_put(sg.in_nbr, edge),
+            in_dst=jax.device_put(sg.in_dst, edge),
+            in_w=jax.device_put(sg.in_w, edge),
+        )
+    return dataclasses.replace(sg, **fields)
+
+
+def shard_graph(
+    g: Graph,
+    mesh: Mesh,
+    axes: Tuple[str, ...] = ("data",),
+    policy: str = "blocked",
+    scheme: str = "oec",
+    grid: Optional[Tuple[int, int]] = None,
+) -> ShardedGraph:
+    """Partition ``g``'s edges over ``mesh`` and home them by ``policy``.
+
+    ``scheme="oec"`` uses ``partition_1d`` (owner = source vertex);
+    ``scheme="cvc"`` uses ``partition_2d`` over ``grid=(rows, cols)`` with
+    ``rows * cols == ndev``.  The result runs through ``SparseLadderEngine``
+    and ``run_dense`` unmodified.
+    """
+    ndev = _num_devices(mesh, axes)
+    if scheme == "cvc":
+        rows, cols = grid if grid is not None else (ndev, 1)
+        assert rows * cols == ndev, (rows, cols, ndev)
+        pg = partition_2d(g, rows, cols, policy=policy)
+    else:
+        pg = partition_1d(g, ndev, policy=policy)
+
+    in_fields = {}
+    if g.has_csc:
+        pgi = partition_1d(g, ndev, policy=policy, direction="in")
+        in_fields = dict(in_nbr=pgi.src, in_dst=pgi.dst, in_w=pgi.w)
+
+    sg = ShardedGraph(
+        n=g.n, m=g.m, n_pad=g.n_pad, block_size=g.block_size,
+        ndev=ndev, epd=pg.epd, scheme=scheme, placement=policy,
+        axes=tuple(axes), mesh=mesh,
+        src=pg.src, dst=pg.dst, w=pg.w,
+        shard_row_ptr=pg.row_ptr, shard_deg=pg.deg, out_deg=pg.out_deg,
+        **in_fields,
+    )
+    return _home(sg)

@@ -8,6 +8,9 @@ from .ops import advance_frontier, edge_relax  # noqa: F401
 from .ref import (  # noqa: F401
     KINDS,
     advance_ref,
+    det_push_ref,
+    det_relax_ref,
+    det_scatter_add,
     neutral_for,
     pull_ref,
     push_ref,

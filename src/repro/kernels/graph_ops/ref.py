@@ -73,6 +73,55 @@ def edge_message(v, w, kind: str, use_weight: bool):
     return v + w if kind in ("min", "max") else v * w
 
 
+def det_scatter_add(dst, msg, out):
+    """Fixed-order scatter-add: stable-sort by destination, sum each
+    destination's messages with a fixed-shape segmented (Hillis–Steele)
+    tree, then add exactly one combined value per destination into ``out``.
+
+    The association order is a function of the edge layout alone, never of
+    the backend's scatter implementation, so float results are bitwise
+    reproducible across substrates (both route here under
+    ``operators.set_deterministic_add(True)``).  Costs one stable sort per
+    relax — a no-op permutation on already-dst-sorted (CSC) edge lists.
+    """
+    m = int(msg.shape[0])
+    order = jnp.argsort(dst, stable=True)
+    seg = dst[order]
+    val = msg[order]
+    zero = jnp.zeros((), val.dtype)
+    k = 1
+    while k < m:
+        shifted = jnp.concatenate([jnp.full((k,), zero), val[:-k]])
+        same = jnp.concatenate(
+            [jnp.zeros((k,), bool), seg[k:] == seg[:-k]])
+        val = val + jnp.where(same, shifted, zero)
+        k *= 2
+    # last slot of each run holds the segment sum; everything else adds the
+    # exact zero of the dtype, which cannot perturb the result
+    is_tail = jnp.concatenate([seg[1:] != seg[:-1], jnp.ones((1,), bool)])
+    return out.at[seg].add(jnp.where(is_tail, val, zero))
+
+
+def det_push_ref(src, dst, w, src_val, active, out_init,
+                 use_weight: bool = True):
+    """``push_ref(kind="add")`` with the deterministic fixed-order sum."""
+    v = src_val[src]
+    msg = edge_message(v, w, "add", use_weight)
+    msg = jnp.where(active[src], msg.astype(out_init.dtype),
+                    jnp.zeros((), out_init.dtype))
+    return det_scatter_add(dst, msg, out_init)
+
+
+def det_relax_ref(src, dst, w, valid, src_val, out_init,
+                  use_weight: bool = True):
+    """``relax_ref(kind="add")`` with the deterministic fixed-order sum."""
+    v = src_val[src]
+    msg = edge_message(v, w, "add", use_weight)
+    msg = jnp.where(valid, msg.astype(out_init.dtype),
+                    jnp.zeros((), out_init.dtype))
+    return det_scatter_add(dst, msg, out_init)
+
+
 def push_ref(src, dst, w, src_val, active, out_init, kind: str = "min",
              use_weight: bool = True):
     """Masked push over an edge list: relax every edge whose source is active."""

@@ -2,6 +2,7 @@
 
 import numpy as np
 import pytest
+import jax.numpy as jnp
 
 from repro.core import from_coo
 from repro.core.algorithms import bc, bfs, cc, kcore, pagerank, sssp, tc
@@ -62,7 +63,8 @@ def test_sssp(gname, variant):
 
 
 @pytest.mark.parametrize("gname", ["rmat_small", "web_like", "erdos", "grid"])
-@pytest.mark.parametrize("variant", ["labelprop", "labelprop_sc", "pointer_jump"])
+@pytest.mark.parametrize(
+    "variant", ["labelprop", "labelprop_sc", "pointer_jump", "dd_sparse"])
 def test_cc(gname, variant):
     g, s, d, _, n = build(gname, symmetrize=True)
     ref = oracles.connected_components(s, d, n)
@@ -86,6 +88,56 @@ def test_pagerank(gname, variant):
         rank, _ = pagerank.pr_push(g, tol=1e-12, max_iters=5000)
     rank = np.asarray(rank)[:n]
     np.testing.assert_allclose(rank, ref, rtol=2e-3, atol=1e-8)
+
+
+@pytest.mark.parametrize("gname", ["rmat_small", "web_like", "erdos"])
+def test_bfs_dirop_forced_pull_directed(gname):
+    """Direction-optimizing BFS with the switch heuristic skewed so the
+    pull (CSC) path actually runs on DIRECTED, non-symmetrized graphs —
+    with Beamer defaults these small graphs may never leave push, leaving
+    pull_dense's asymmetric-CSC handling untested."""
+    g, s, d, _, n = build(gname, csc=True)
+    source = max_outdeg_vertex(s, n)
+    ref = oracles.bfs(s, d, n, source)
+    # alpha tiny -> switch to pull almost immediately; beta huge -> stay there
+    dist, stats = bfs.bfs_dirop(g, source, alpha=0.01, beta=1e9)
+    got = np.asarray(dist)[:n]
+    got = np.where(got > 1e30, np.inf, got)
+    np.testing.assert_allclose(got, ref, rtol=0, atol=0)
+    assert stats.rounds > 0
+
+
+@pytest.mark.parametrize("gname", ["rmat_small", "web_like", "erdos"])
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_pull_dense_directed_oracle(gname, substrate):
+    """CSC pull on a directed, non-symmetrized graph against a direct numpy
+    in-edge reduction (the parity suite only cross-checks substrates)."""
+    from repro.core import operators as ops
+
+    g, s, d, w, n = build(gname, weighted=True, csc=True)
+    rng = np.random.default_rng(13)
+    sv = np.rint(rng.normal(size=g.n_pad) * 3).astype(np.float32)
+    active = rng.random(g.n_pad) < 0.6
+    active[g.sentinel] = False
+    init = np.full(g.n_pad, np.finfo(np.float32).max, np.float32)
+    expect = init.copy()
+    for u, v, ww in zip(s, d, w):  # in-edge u -> v relaxes v
+        if active[u]:
+            expect[v] = min(expect[v], np.float32(sv[u] + np.float32(ww)))
+    got = ops.pull_dense(g, jnp.asarray(sv), jnp.asarray(active),
+                         jnp.asarray(init), kind="min", substrate=substrate)
+    np.testing.assert_array_equal(np.asarray(got), expect)
+
+
+@pytest.mark.parametrize("gname", ["rmat_small", "web_like", "erdos"])
+def test_pagerank_pull_directed_oracle(gname):
+    """pr_pull on directed, non-symmetrized graphs: dangling-mass handling
+    only shows up when out-degrees are asymmetric (the symmetrized cases in
+    test_pagerank never exercise it)."""
+    g, s, d, _, n = build(gname, csc=True)
+    ref = oracles.pagerank(s, d, n)
+    rank, _ = pagerank.pr_pull(g, tol=1e-10, max_iters=300)
+    np.testing.assert_allclose(np.asarray(rank)[:n], ref, rtol=2e-3, atol=1e-8)
 
 
 @pytest.mark.parametrize("gname", ["rmat_small", "erdos", "grid"])

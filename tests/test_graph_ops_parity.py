@@ -12,6 +12,8 @@ hypothesis) lives in test_engine_properties.py and reuses
 ``check_backend_invariant`` from here.
 """
 
+import os
+
 import numpy as np
 import pytest
 import jax.numpy as jnp
@@ -158,6 +160,105 @@ def test_e2e_dirop_and_cc_backend_invariant():
     assert_bitwise(l_j, l_p, "cc_labelprop")
 
 
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_edgebatch_overflow_reporting(substrate):
+    """When the budget cannot hold the frontier's edge mass, advance must
+    still report the TRUE total (the engine's overflow check) and fill
+    exactly ``budget`` valid slots — never silently under-report."""
+    g = build("hub_leaves")  # hub vertex 0 has out-degree 70
+    mask = jnp.zeros((g.n_pad,), bool).at[0].set(True)
+    f = fr.compact(mask, g.block_size, g.sentinel)
+    batch = ops.advance_sparse(g, f, budget=64, substrate=substrate)
+    assert int(batch.total) == 70
+    assert int(batch.total) > 64  # overflow correctly visible
+    assert int(jnp.sum(batch.valid)) == 64
+    # with a covering budget the same frontier enumerates everything
+    batch2 = ops.advance_sparse(g, f, budget=128, substrate=substrate)
+    assert int(batch2.total) == 70 and int(jnp.sum(batch2.valid)) == 70
+
+
+def test_ladder_engine_escalates_instead_of_dropping(monkeypatch):
+    """Force pick_capacity to hand the engine rungs that cannot hold the
+    frontier: the engine must escalate those rounds to the dense step (and
+    count them) rather than drop edges — labels stay bitwise identical."""
+    from repro.core import engine as engine_mod
+    from repro.core.algorithms.bfs import bfs_dd_sparse
+
+    g = build("hub_leaves", csc=False)  # hub round: edge mass 70 > rung 64
+    ref, ref_stats = bfs_dd_sparse(g, 0)
+    assert ref_stats.overflow_escalations == 0  # normal runs never overflow
+
+    real_pick = fr.pick_capacity
+
+    def lowball(count, ladder):
+        return ladder[0]  # smallest rung regardless of demand
+
+    monkeypatch.setattr(engine_mod.fr, "pick_capacity", lowball)
+    got, stats = bfs_dd_sparse(g, 0)
+    monkeypatch.setattr(engine_mod.fr, "pick_capacity", real_pick)
+    assert stats.overflow_escalations > 0
+    assert_bitwise(ref, got, "overflow escalation must not drop edges")
+
+
+def float_vertex_data(g, seed=1):
+    rng = np.random.default_rng(seed)
+    sv = jnp.asarray(rng.normal(size=g.n_pad).astype(np.float32))
+    active = jnp.asarray(rng.random(g.n_pad) < 0.7).at[g.sentinel].set(False)
+    return sv, active, jnp.zeros((g.n_pad,), jnp.float32)
+
+
+def build_float(name, block=64, csc=True):
+    """Non-integer weights: summation ORDER is observable in the bits."""
+    src, dst, n = GRAPHS[name]()
+    rng = np.random.default_rng(8)
+    w = rng.uniform(0.1, 2.0, len(src)).astype(np.float32)
+    return from_coo(src, dst, n, w, block_size=block, build_csc=csc)
+
+
+@pytest.mark.parametrize("op", ["push", "pull", "relax"])
+def test_deterministic_add_bitwise_across_substrates(op):
+    """The ROADMAP float-add item: under deterministic_add, kind='add'
+    reduces in one fixed tree order on every substrate, so non-integer
+    float sums match bitwise (plain mode only guarantees tolerance)."""
+    g = build_float("web_like")
+    sv, active, init = float_vertex_data(g)
+    if op == "relax":
+        f = fr.compact(active, g.n_pad, g.sentinel)
+        batch = ops.advance_sparse(g, f, budget=4 * g.block_size,
+                                   substrate="jnp")
+        call = lambda sub: ops.relax_batch(batch, sv, init, kind="add",
+                                           substrate=sub)
+    elif op == "pull":
+        call = lambda sub: ops.pull_dense(g, sv, active, init, kind="add",
+                                          substrate=sub)
+    else:
+        call = lambda sub: ops.push_dense(g, sv, active, init, kind="add",
+                                          substrate=sub)
+    with ops.deterministic_add_scope():
+        a = call("jnp")
+        b = call("pallas")
+    assert_bitwise(a, b, f"det-add/{op}")
+    # the fixed-order sum is still the same sum, to float tolerance
+    np.testing.assert_allclose(np.asarray(a), np.asarray(call("jnp")),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_pagerank_bitwise_across_substrates_with_det_add():
+    """Pins the ROADMAP promise end-to-end: pagerank (float 'add' on
+    non-integer contributions) becomes bitwise backend-reproducible under
+    deterministic_add — compare with test_e2e_pagerank_close_across_backends,
+    which can only assert allclose."""
+    src, dst, n = gen.erdos(200, 1600, seed=6)
+    g = from_coo(src, dst, n, block_size=64, build_csc=True)
+    with ops.deterministic_add_scope():
+        r_j, r_p = run_both(lambda: pagerank.pr_pull(g))
+    assert_bitwise(r_j, r_p, "pagerank det-add")
+    # deterministic mode changes the order, not the answer
+    r_plain, _ = pagerank.pr_pull(g)
+    np.testing.assert_allclose(np.asarray(r_j), np.asarray(r_plain),
+                               rtol=1e-6, atol=1e-10)
+
+
 def test_e2e_pagerank_close_across_backends():
     """pr_pull reduces with float 'add' on non-integer contributions, so the
     substrates may differ by summation order — allclose, not bitwise."""
@@ -168,12 +269,25 @@ def test_e2e_pagerank_close_across_backends():
                                rtol=1e-6, atol=1e-9)
 
 
-def test_engine_reuse_retraces_on_substrate_flip():
+def test_engine_reuse_retraces_on_substrate_flip(monkeypatch):
     """A reused SparseLadderEngine must drop step caches traced under the
     previous substrate — otherwise it executes one backend while reporting
-    the other."""
+    the other.  Counting actual kernel invocations matters: JAX shares
+    trace caches across jit wrappers of the same function object, so a
+    naive re-jit of the module-level step would NOT retrace and the pallas
+    run would silently replay the jnp trace."""
     from repro.core.engine import SparseLadderEngine
     from repro.core.algorithms.bfs import _dense_step, _init_dist, _sparse_step
+    from repro.core import operators as ops_mod
+
+    kernel_hits = []
+    real_relax = ops_mod.gk.edge_relax
+
+    def counting_relax(*a, **k):
+        kernel_hits.append(1)
+        return real_relax(*a, **k)
+
+    monkeypatch.setattr(ops_mod.gk, "edge_relax", counting_relax)
 
     g = build("web_like")
     eng = SparseLadderEngine(g, _sparse_step, _dense_step)
@@ -182,25 +296,30 @@ def test_engine_reuse_retraces_on_substrate_flip():
         d_j, _ = eng.run(_init_dist(g, 0), mask0)
         assert eng.stats.substrate == "jnp"
         compiles_first = eng.stats.compiles
+    assert not kernel_hits  # jnp run must not touch the pallas kernels
     with ops.substrate_scope("pallas"):
         d_p, _ = eng.run(_init_dist(g, 0), mask0)
         assert eng.stats.substrate == "pallas"
         assert eng.stats.compiles > compiles_first  # caches were dropped
+    assert kernel_hits, "pallas run never reached the pallas kernels"
     assert_bitwise(d_j, d_p, "engine reuse across substrates")
 
 
 def test_substrate_selection_api():
-    assert ops.get_substrate() == "jnp"
+    # the process default is env-selectable (CI runs the suite under both)
+    assert ops.DEFAULT_SUBSTRATE == os.environ.get("REPRO_SUBSTRATE", "jnp")
+    prev = ops.get_substrate()
+    assert prev in ops.SUBSTRATES
     ops.set_substrate("pallas")
     try:
         assert ops.get_substrate() == "pallas"
     finally:
-        ops.set_substrate("jnp")
+        ops.set_substrate(prev)
     with pytest.raises(ValueError):
         ops.set_substrate("cuda")
     with ops.substrate_scope("pallas"):
         assert ops.get_substrate() == "pallas"
-    assert ops.get_substrate() == "jnp"
+    assert ops.get_substrate() == prev
     g = build("web_like")
     with pytest.raises(ValueError):
         sv, active, init = vertex_data(g, "min")
