@@ -2,6 +2,9 @@
 
 from __future__ import annotations
 
+import json
+import subprocess
+import sys
 import time
 from typing import Callable
 
@@ -23,13 +26,58 @@ def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
     return float(np.median(ts))
 
 
-def row(name: str, us: float, derived: str = "") -> tuple:
-    return (name, us, derived)
+def row(name: str, us: float, derived: str = "", stats: dict | None = None) -> tuple:
+    """One benchmark row.  ``stats`` (e.g. ``RunStats.as_dict()``) rides
+    along for ``run.py --emit-json``; the CSV printer ignores it."""
+    return (name, us, derived, stats)
 
 
 def print_rows(rows):
-    for name, us, derived in rows:
+    for r in rows:
+        name, us, derived = r[0], r[1], r[2]
         print(f"{name},{us:.1f},{derived}")
+
+
+def run_bench_subprocess(script: str, error_name: str, timeout: int = 900):
+    """Run a benchmark script in a fresh interpreter (suites that force a
+    host device count need one) and parse its ``ROW,name,us,derived`` /
+    ``STAT,name,<json>`` protocol into row tuples.  Emits a single
+    ``<error_name>,0.0,<stderr tail>`` row when the script produced
+    nothing — ``run.py`` treats ``*/ERROR`` rows as suite failure."""
+    r = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
+             "JAX_PLATFORMS": "cpu"},
+        timeout=timeout,
+    )
+    stats = {}
+    for line in r.stdout.splitlines():
+        if line.startswith("STAT,"):
+            _, name, payload = line.split(",", 2)
+            stats[name] = json.loads(payload)
+    rows = []
+    for line in r.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, name, us, derived = line.split(",", 3)
+            rows.append(row(name, float(us), derived, stats.get(name)))
+    if not rows:
+        rows.append(row(error_name, 0.0,
+                        r.stderr[-200:].replace(",", ";").replace("\n", " ")))
+    return rows
+
+
+def rows_as_json(suite: str, rows) -> dict:
+    """JSON document for ``run.py --emit-json``: every row's name, wall
+    time, derived counters, and the full stats dict when present."""
+    out = []
+    for r in rows:
+        name, us, derived = r[0], r[1], r[2]
+        stats = r[3] if len(r) > 3 else None
+        entry = {"name": name, "us_per_call": us, "derived": derived}
+        if stats is not None:
+            entry["stats"] = stats
+        out.append(entry)
+    return {"suite": suite, "rows": out}
 
 
 def bench_graphs(scale: str = "small"):

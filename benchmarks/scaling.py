@@ -1,32 +1,38 @@
-"""Paper Fig. 10 — strong scaling (threads → devices), engine vs BSP.
+"""Paper Fig. 10 — strong scaling (threads → devices), engine vs BSP,
+plus the CVC-vs-full-mesh communication trajectory.
 
-bfs on 1/2/4/8 host devices, two execution models per device count:
+bfs on 1/2/4/8 host devices, per device count:
 
 * ``engine`` — the sharded ``SparseLadderEngine`` path (``shard_graph`` +
-  blocked placement): data-driven sparse worklists with per-shard
-  merge-path budgets, which a BSP framework cannot express.
+  blocked placement, communication-avoiding reducer): data-driven sparse
+  worklists with per-shard merge-path budgets and per-shard escalation,
+  which a BSP framework cannot express.
 * ``bsp``    — the ``partition.py`` bulk-synchronous vertex-program
   baseline (the D-Galois class): every round touches every edge shard.
+* ``cvc2d_{cvc,full}`` (ndev ≥ 4) — the same engine on a ``partition_2d``
+  grid under both cross-device reducers, so ``BENCH_scaling.json`` records
+  the reduction-volume gap (``comm_elems``) the communication-avoiding
+  structure buys; the acceptance bar is ≥ 2× fewer reduced elements for
+  CVC at ndev=8.
 
 On this 1-core container wall-times cannot scale (all "devices" share the
 core) — the derived columns therefore carry the paper's actual
 work-efficiency argument (Fig. 6/10): ``edges_touched`` for the sparse
 engine stays near the frontier mass while the BSP engine pays
-rounds × m, and per-device working-set bytes (the near-memory-fit
-quantity) shrink with D.
+rounds × m, per-device working-set bytes shrink with D, and ``comm_elems``
+carries the reduction-volume model (``sharded.CrossReducer``).
 """
 
 from __future__ import annotations
 
-import subprocess
-import sys
 import textwrap
 
-from .common import row
+from .common import run_bench_subprocess
 
 _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
     import time
     import numpy as np
     import jax
@@ -46,42 +52,58 @@ _SCRIPT = textwrap.dedent("""
         fn(); t0 = time.perf_counter(); out = fn()
         jax.block_until_ready(out); return (time.perf_counter()-t0)*1e6
 
-    for d in (1, 2, 4, 8):
-        mesh = Mesh(np.array(jax.devices()[:d]).reshape(d), ("data",))
+    def emit(name, us, derived, stats=None):
+        print(f"ROW,{name},{us:.1f},{derived}")
+        if stats is not None:
+            print("STAT," + name + "," + json.dumps(stats))
 
-        # --- sharded sparse-ladder engine (shared-memory class, on shards)
+    devs = np.array(jax.devices())
+    for d in (1, 2, 4, 8):
+        mesh = Mesh(devs[:d].reshape(d), ("data",))
+
+        # --- sharded sparse-ladder engine (communication-avoiding reducer)
         sg = shard_graph(g, mesh, ("data",), policy="blocked")
         us = t(lambda: bfs.bfs_dd_sparse(sg, source)[0])
         _, st = bfs.bfs_dd_sparse(sg, source)
-        print(f"ROW,fig10/engine_bfs_dev{d},{us:.1f},"
-              f"edges_touched={st.edges_touched};"
-              f"sparse_rounds={st.sparse_rounds};"
-              f"dense_rounds={st.dense_rounds};"
-              f"bytes_per_dev={total_bytes//d}")
+        emit(f"fig10/engine_bfs_dev{d}", us,
+             f"edges_touched={st.edges_touched};"
+             f"sparse_rounds={st.sparse_rounds};"
+             f"dense_rounds={st.dense_rounds};"
+             f"comm_elems={st.comm_elems};"
+             f"bytes_per_dev={total_bytes//d}",
+             dict(st.as_dict(), wall_us=us, algo="bfs_dd_sparse",
+                  scheme="oec", reducer="cvc", bytes_per_dev=total_bytes//d))
 
         # --- BSP vertex-program baseline (dense worklist every round)
         pg = pt.partition_1d(g, d)
         us = t(lambda: pt.bsp_bfs(pg, mesh, ("data",), source)[0])
         _, rounds = pt.bsp_bfs(pg, mesh, ("data",), source)
-        print(f"ROW,fig10/bsp_bfs_dev{d},{us:.1f},"
-              f"edges_touched={rounds * g.m};"
-              f"rounds={rounds};"
-              f"bytes_per_dev={total_bytes//d}")
+        emit(f"fig10/bsp_bfs_dev{d}", us,
+             f"edges_touched={rounds * g.m};"
+             f"rounds={rounds};"
+             f"bytes_per_dev={total_bytes//d}",
+             dict(algo="bsp_bfs", ndev=d, rounds=int(rounds),
+                  edges_touched=int(rounds) * g.m, wall_us=us,
+                  bytes_per_dev=total_bytes // d))
+
+        # --- CVC 2-D grid: communication-avoiding vs full-mesh reducer
+        if d >= 4:
+            grid = (2, d // 2)
+            mesh2 = Mesh(devs[:d].reshape(grid), ("data", "model"))
+            for reducer in ("cvc", "full"):
+                sg2 = shard_graph(g, mesh2, ("data", "model"), scheme="cvc",
+                                  grid=grid, reducer=reducer)
+                us = t(lambda: bfs.bfs_dd_sparse(sg2, source)[0])
+                _, st2 = bfs.bfs_dd_sparse(sg2, source)
+                emit(f"fig10/cvc2d_{reducer}_bfs_dev{d}", us,
+                     f"comm_elems={st2.comm_elems};"
+                     f"comm_bytes={st2.comm_bytes};"
+                     f"reduce_axis_hops={st2.reduce_axis_hops};"
+                     f"edges_touched={st2.edges_touched}",
+                     dict(st2.as_dict(), wall_us=us, algo="bfs_dd_sparse",
+                          scheme="cvc", grid=list(grid), reducer=reducer))
 """)
 
 
 def run():
-    rows = []
-    r = subprocess.run(
-        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
-             "JAX_PLATFORMS": "cpu"},
-        timeout=900,
-    )
-    for line in r.stdout.splitlines():
-        if line.startswith("ROW,"):
-            _, name, us, derived = line.split(",", 3)
-            rows.append(row(name, float(us), derived))
-    if not rows:
-        rows.append(row("fig10/ERROR", 0.0, r.stderr[-200:].replace(",", ";")))
-    return rows
+    return run_bench_subprocess(_SCRIPT, "fig10/ERROR")

@@ -45,8 +45,8 @@ def bfs_topo(g: Graph, src: int, max_rounds: int = 100_000):
     rounds, (dist, _) = run_dense(
         step_correct, (dist0, jnp.bool_(True)), lambda s: s[1], max_rounds
     )
-    stats = RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
-                     dense_rounds=int(rounds))
+    stats = RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
+                     edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
     return dist, stats
 
 
@@ -63,16 +63,16 @@ def bfs_dd_dense(g: Graph, src: int, max_rounds: int = 100_000):
     rounds, (dist, _) = run_dense(
         step, (dist0, mask0), lambda s: jnp.any(s[1]), max_rounds
     )
-    stats = RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
-                     dense_rounds=int(rounds))
+    stats = RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
+                     edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
     return dist, stats
 
 
 def _sparse_step(g, dist, mask, *, capacity: int, budget: int):
-    f = fr.compact(mask, capacity, g.sentinel)
-    batch = ops.advance_sparse(g, f, budget)
-    new = ops.relax_batch(batch, dist, dist, kind="min", use_weight=True)
-    return new, ops.updated_mask(dist, new)
+    new, esc = ops.sparse_round(g, dist, mask, dist, kind="min",
+                                use_weight=True, capacity=capacity,
+                                budget=budget)
+    return new, ops.updated_mask(dist, new), esc
 
 
 def _dense_step(g, dist, mask):
@@ -121,8 +121,8 @@ def bfs_dirop(
         lambda s: jnp.any(s[1]),
         max_rounds,
     )
-    stats = RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
-                     dense_rounds=int(rounds))
+    stats = RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
+                     edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
     return dist, stats
 
 

@@ -48,8 +48,8 @@ def cc_labelprop(g: Graph, max_rounds: int = 100_000):
     rounds, (lab, _) = run_dense(
         step, (lab0, mask0), lambda s: jnp.any(s[1]), max_rounds
     )
-    return lab, RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
-                         dense_rounds=int(rounds))
+    return lab, RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
+                         edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
 
 
 def cc_labelprop_sc(g: Graph, max_rounds: int = 100_000, jumps_per_round: int = 2):
@@ -68,8 +68,8 @@ def cc_labelprop_sc(g: Graph, max_rounds: int = 100_000, jumps_per_round: int = 
     rounds, (lab, _) = run_dense(
         step, (lab0, mask0), lambda s: jnp.any(s[1]), max_rounds
     )
-    return lab, RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
-                         dense_rounds=int(rounds))
+    return lab, RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
+                         edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
 
 
 def cc_pointer_jump(g: Graph, max_rounds: int = 10_000):
@@ -111,10 +111,10 @@ def cc_pointer_jump(g: Graph, max_rounds: int = 10_000):
 
 
 def _cc_sparse_step(g, lab, mask, *, capacity: int, budget: int):
-    f = fr.compact(mask, capacity, g.sentinel)
-    batch = ops.advance_sparse(g, f, budget)
-    new = ops.relax_batch(batch, lab, lab, kind="min", use_weight=False)
-    return new, ops.updated_mask(lab, new)
+    new, esc = ops.sparse_round(g, lab, mask, lab, kind="min",
+                                use_weight=False, capacity=capacity,
+                                budget=budget)
+    return new, ops.updated_mask(lab, new), esc
 
 
 def _cc_dense_step(g, lab, mask):

@@ -45,8 +45,8 @@ def pr_pull(
     rounds, (rank, resid) = run_dense(
         step, (rank0, jnp.float32(jnp.inf)), lambda s: s[1] > tol, max_iters
     )
-    return rank, RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
-                          dense_rounds=int(rounds))
+    return rank, RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
+                          edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
 
 
 def pr_push(
@@ -81,8 +81,8 @@ def pr_push(
     )
     rank = rank + resid  # fold in the leftover residual
     rank = jnp.where(valid, rank / jnp.sum(rank), 0.0)
-    return rank, RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
-                          dense_rounds=int(rounds))
+    return rank, RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
+                          edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
 
 
 VARIANTS = {"pull": pr_pull, "push": pr_push}

@@ -43,8 +43,8 @@ def sssp_bellman_ford(g: Graph, src: int, max_rounds: int = 100_000):
     rounds, (dist, _) = run_dense(
         step, (dist0, jnp.bool_(True)), lambda s: s[1], max_rounds
     )
-    return dist, RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
-                          dense_rounds=int(rounds))
+    return dist, RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
+                          edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
 
 
 def sssp_dd_dense(g: Graph, src: int, max_rounds: int = 100_000):
@@ -59,15 +59,14 @@ def sssp_dd_dense(g: Graph, src: int, max_rounds: int = 100_000):
     rounds, (dist, _) = run_dense(
         step, (dist0, mask0), lambda s: jnp.any(s[1]), max_rounds
     )
-    return dist, RunStats.from_graph(g, rounds=int(rounds), edges_touched=int(rounds) * g.m,
-                          dense_rounds=int(rounds))
+    return dist, RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
+                          edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
 
 
 def _sssp_sparse_step(g, dist, mask, *, capacity: int, budget: int):
-    f = fr.compact(mask, capacity, g.sentinel)
-    batch = ops.advance_sparse(g, f, budget)
-    new = ops.relax_batch(batch, dist, dist, kind="min")
-    return new, ops.updated_mask(dist, new)
+    new, esc = ops.sparse_round(g, dist, mask, dist, kind="min",
+                                capacity=capacity, budget=budget)
+    return new, ops.updated_mask(dist, new), esc
 
 
 def _sssp_dense_step(g, dist, mask):

@@ -14,12 +14,25 @@ Two execution regimes, mirroring the paper's §5 classification:
   frontier's edge mass exceeds the largest sparse budget, the engine falls
   back to the dense step for that round (direction-optimizing style).
 
+  On a sharded graph the ladder is **per shard**: the capacity rung is
+  sized by the largest *local* frontier (active vertices with local
+  edges), the budget rung by the *median* per-shard edge mass, and a
+  hub-heavy shard whose mass outgrows the rung escalates alone to its
+  shard-local dense relax inside the step (``RunStats.shard_escalations``)
+  instead of forcing a global dense round.  All round scalars (frontier
+  size, per-shard counts and masses) are computed on-device by one jitted
+  helper and fetched in a single transfer, so the host overlaps rung
+  selection with the still-executing relax + cross-device reduce (JAX
+  async dispatch) instead of issuing multiple blocking reductions.
+
 Both engines report work counters so benchmarks can reproduce the paper's
 work-efficiency argument (Fig. 6/7): ``edges_touched`` is the number of edge
 slots actually processed, which for the dense engine is m per round and for
 the sparse engine is the chosen budget.  ``RunStats.substrate`` records
 which relaxation substrate ("jnp" or "pallas" — see operators.py) the run
-lowered through.
+lowered through, and the ``comm_*`` counters accumulate the analytic
+cross-device communication model of ``sharded.CrossReducer`` (zero for
+unsharded runs).
 """
 
 from __future__ import annotations
@@ -45,6 +58,15 @@ class RunStats:
     # sparse rung couldn't cover the frontier's edge mass → the engine fell
     # back to the dense step for that round (edges are never dropped)
     overflow_escalations: int = 0
+    # shards that individually escalated to their local dense relax inside
+    # a sparse round (per-shard ladder overflow; 0 on a single partition)
+    shard_escalations: int = 0
+    # analytic cross-device communication (sharded.CrossReducer model):
+    # elements / bytes crossing devices in label reductions + rebuild
+    # gathers, and mesh axes traversed by reductions.  Zero when unsharded.
+    comm_elems: int = 0
+    comm_bytes: int = 0
+    reduce_axis_hops: int = 0
     # execution geometry: device count and placement policy of the graph the
     # run executed on (1/"local" for an unsharded Graph)
     ndev: int = 1
@@ -53,11 +75,29 @@ class RunStats:
     substrate: str = dataclasses.field(default_factory=ops.get_substrate)
 
     @classmethod
-    def from_graph(cls, g, **kw) -> "RunStats":
+    def from_graph(cls, g, relaxes: int = 0, **kw) -> "RunStats":
         """Stats pre-filled with the graph's execution geometry (works for
-        both ``Graph`` and ``sharded.ShardedGraph``)."""
-        return cls(ndev=getattr(g, "ndev", 1),
-                   placement=getattr(g, "placement", "local"), **kw)
+        both ``Graph`` and ``sharded.ShardedGraph``).  ``relaxes`` charges
+        that many cross-device label reductions to the comm counters —
+        algorithms built on ``run_dense`` pass their round count."""
+        st = cls(ndev=getattr(g, "ndev", 1),
+                 placement=getattr(g, "placement", "local"), **kw)
+        st.add_comm(g, relaxes)
+        return st
+
+    def add_comm(self, g, relaxes: int = 1, scalar_collectives: int = 0):
+        """Accumulate the analytic comm model for ``relaxes`` label
+        reductions on ``g`` (no-op for an unsharded ``Graph``), plus any
+        scalar flag collectives (charged as one element per device pair)."""
+        model = getattr(g, "comm_per_relax", None)
+        if model is None:
+            return
+        e, b, h = model()
+        d = getattr(g, "ndev", 1)
+        flag = scalar_collectives * d * (d - 1) if d > 1 else 0
+        self.comm_elems += e * relaxes + flag
+        self.comm_bytes += b * relaxes + flag * 4
+        self.reduce_axis_hops += h * relaxes
 
     def as_dict(self):
         return dataclasses.asdict(self)
@@ -92,7 +132,7 @@ class SparseLadderEngine:
     def __init__(
         self,
         g: Graph,
-        sparse_step: Callable,  # (g, labels, frontier_mask, capacity, budget) -> (labels, mask)
+        sparse_step: Callable,  # (g, labels, mask, capacity, budget) -> (labels, mask, esc)
         dense_step: Callable,   # (g, labels, frontier_mask) -> (labels, mask)
         ladder_base: int = 4,
         budget_factor: int = 4,
@@ -100,14 +140,15 @@ class SparseLadderEngine:
         self.g = g
         self.cap_ladder = fr.ladder_capacities(g.n_pad, g.block_size, ladder_base)
         # budgets are per merge-path expansion: per-device on a sharded
-        # graph (each shard expands the frontier over its own epd edges),
-        # whole-graph otherwise
+        # graph (each shard expands its local frontier over its own epd
+        # edges), whole-graph otherwise
         shard_edges = getattr(g, "epd", g.m_pad)
         self.budget_ladder = fr.ladder_capacities(shard_edges, g.block_size,
                                                   ladder_base)
         self.budget_factor = budget_factor
         self._sparse = {}
         self._dense = None
+        self._scalars = None
         self._sparse_fn = sparse_step
         self._dense_fn = dense_step
         self.stats = RunStats.from_graph(g)
@@ -148,6 +189,31 @@ class SparseLadderEngine:
             self._dense = self._pinned_jit(self._dense_fn)
         return self._dense
 
+    def _get_scalars(self):
+        """One jitted device-side reduction of every scalar the ladder
+        needs for the next round — (frontier size, max per-shard local
+        frontier, median per-shard edge mass) — fetched in a single
+        transfer.  The relax/reduce of the round that produced ``mask``
+        keeps executing underneath the fetch (async dispatch), so rung
+        selection overlaps the cross-device reduce."""
+        if self._scalars is None:
+            shard_deg = getattr(self.g, "shard_deg", None)
+            if shard_deg is not None and getattr(self.g, "ndev", 1) > 1:
+                def scal(g, mask):
+                    count = jnp.sum(mask.astype(jnp.int32))
+                    local = mask[None, :] & (g.shard_deg > 0)
+                    counts = jnp.sum(local.astype(jnp.int32), axis=1)
+                    masses = jnp.sum(
+                        jnp.where(mask[None, :], g.shard_deg, 0), axis=1)
+                    srt = jnp.sort(masses)
+                    return count, jnp.max(counts), srt[srt.shape[0] // 2]
+            else:
+                def scal(g, mask):
+                    count = jnp.sum(mask.astype(jnp.int32))
+                    return count, count, g.budget_edge_mass(mask)
+            self._scalars = jax.jit(scal)
+        return self._scalars
+
     def run(self, labels, mask, max_rounds: int = 10_000):
         g = self.g
         # cached steps were pinned to the (substrate, deterministic-add)
@@ -160,32 +226,43 @@ class SparseLadderEngine:
             self._dense = None
         self._traced_mode = mode
         self.stats.substrate = ops.get_substrate()
+        ndev = self.stats.ndev
+        epd = getattr(g, "epd", g.m_pad)
         # max sparse budget: don't bother with sparse when it costs ~ dense
         sparse_cutoff = self.budget_ladder[-1] // 2
         for _ in range(max_rounds):
-            count = int(jnp.sum(mask))
+            count, cap_need, mass_med = (
+                int(x) for x in jax.device_get(self._get_scalars()(g, mask)))
             if count == 0:
                 break
             self.stats.rounds += 1
-            cap = fr.pick_capacity(count, self.cap_ladder)
-            # (max per-shard) edge mass of the frontier decides budget/fallback
-            edge_mass = int(g.budget_edge_mass(mask))
-            budget = fr.pick_capacity(max(edge_mass, 1), self.budget_ladder)
-            # a rung that cannot hold the frontier (vertices or edges) would
-            # silently drop work — escalate to the dense step instead.
-            # Unreachable when pick_capacity honours the ladder contract
-            # (rung >= requested); kept as the overflow backstop.
-            overflow = budget < edge_mass or cap < count
-            if overflow and edge_mass <= sparse_cutoff:
+            cap = fr.pick_capacity(max(cap_need, 1), self.cap_ladder)
+            # budget rung sized for the TYPICAL shard (median mass): light
+            # shards stop paying for the heaviest one, and a hub-heavy
+            # shard escalates alone inside the step (shard_escalations)
+            budget = fr.pick_capacity(max(mass_med, 1), self.budget_ladder)
+            # a rung that cannot hold what it was picked for would silently
+            # drop work — escalate to the dense step instead.  Unreachable
+            # when pick_capacity honours the ladder contract (rung >=
+            # requested); kept as the overflow backstop.
+            overflow = budget < mass_med or cap < cap_need
+            if overflow and mass_med <= sparse_cutoff:
                 self.stats.overflow_escalations += 1
-            if edge_mass > sparse_cutoff or overflow:
+            # the dense fallback keys on the TYPICAL shard: when only a
+            # hub-heavy minority outgrows the rung, the round stays sparse
+            # and those shards escalate locally inside the step
+            if mass_med > sparse_cutoff or overflow:
                 labels, mask = self._get_dense()(g, labels, mask)
                 self.stats.dense_rounds += 1
                 self.stats.edges_touched += g.m
+                self.stats.add_comm(g, relaxes=1)
             else:
-                labels, mask = self._get_sparse(cap, budget)(
+                labels, mask, esc = self._get_sparse(cap, budget)(
                     g, labels, mask, capacity=cap, budget=budget
                 )
+                esc = int(esc)
+                self.stats.shard_escalations += esc
                 self.stats.sparse_rounds += 1
-                self.stats.edges_touched += budget * self.stats.ndev
+                self.stats.edges_touched += budget * (ndev - esc) + epd * esc
+                self.stats.add_comm(g, relaxes=1, scalar_collectives=1)
         return labels, mask

@@ -93,6 +93,20 @@ def compact(mask: jax.Array, capacity: int, sentinel: int) -> SparseFrontier:
     return SparseFrontier(idx=idx.astype(jnp.int32), count=count, sentinel=sentinel)
 
 
+def compact_local(mask: jax.Array, deg: jax.Array, capacity: int,
+                  sentinel: int):
+    """Shard-local compaction for the per-shard frontier ladder (raw
+    arrays, safe inside ``shard_map``): compacts the replicated active
+    mask restricted to vertices with *local* edges (``deg > 0``), so each
+    shard's worklist only holds vertices it will actually expand.  Returns
+    ``(idx, count)`` — ``count`` is the true local frontier size and may
+    exceed ``capacity``, which is the shard's overflow signal."""
+    m = (mask & (deg > 0)).at[sentinel].set(False)
+    count = jnp.sum(m.astype(jnp.int32))
+    (idx,) = jnp.nonzero(m, size=capacity, fill_value=sentinel)
+    return idx.astype(jnp.int32), count
+
+
 def ladder_capacities(n_pad: int, block_size: int, base: int = 4) -> Tuple[int, ...]:
     """Geometric capacity ladder ending at n_pad."""
     caps = []

@@ -62,6 +62,7 @@ import jax.numpy as jnp
 
 from ..kernels import graph_ops as gk
 from ..kernels.graph_ops import neutral_for, scatter_reduce  # noqa: F401 (re-export)
+from . import frontier as fr
 from .frontier import DenseFrontier, SparseFrontier
 from .graph import Graph
 
@@ -147,6 +148,11 @@ def push_dense(
     sub = _resolve(substrate)
     sharded = getattr(g, "sharded_push_dense", None)
     if sharded is not None:
+        if kind == "add" and _deterministic_add:
+            # canonical-order fixed tree over the flat edge multiset:
+            # bitwise identical across placement × ndev AND to the
+            # single-device deterministic path (see sharded._det_add_flat)
+            return g.sharded_det_push(src_val, active, out_init, use_weight)
         return sharded(src_val, active, out_init, kind, use_weight, sub)
     if kind == "add" and _deterministic_add:
         return gk.det_push_ref(g.src_idx, g.col_idx, g.edge_w, src_val,
@@ -176,6 +182,8 @@ def pull_dense(
     sub = _resolve(substrate)
     sharded = getattr(g, "sharded_pull_dense", None)
     if sharded is not None:
+        if kind == "add" and _deterministic_add:
+            return g.sharded_det_pull(src_val, active, out_init, use_weight)
         return sharded(src_val, active, out_init, kind, use_weight, sub)
     assert g.has_csc, "pull_dense requires build_csc=True"
     if kind == "add" and _deterministic_add:
@@ -242,6 +250,8 @@ def relax_batch(
     sub = _resolve(substrate)
     sharded = getattr(batch, "sharded_relax", None)
     if sharded is not None:
+        if kind == "add" and _deterministic_add:
+            return batch.sharded_det_relax(src_val, out_init, use_weight)
         return sharded(src_val, out_init, kind, use_weight, sub)
     if kind == "add" and _deterministic_add:
         return gk.det_relax_ref(batch.src, batch.dst, batch.w, batch.valid,
@@ -253,6 +263,50 @@ def relax_batch(
         )
     return gk.relax_ref(batch.src, batch.dst, batch.w, batch.valid, src_val,
                         out_init, kind, use_weight)
+
+
+def sparse_round(
+    g: Graph,
+    src_val: jax.Array,
+    mask: jax.Array,
+    out_init: jax.Array,
+    kind: str = "min",
+    use_weight: bool = True,
+    *,
+    capacity: int,
+    budget: int,
+    substrate: str | None = None,
+):
+    """One fused data-driven round: compact → advance → relax.
+
+    On a plain ``Graph`` this composes the existing ops (global compaction
+    into a ``capacity``-slot worklist, merge-path advance into ``budget``
+    edge slots, batch relax).  On a ``ShardedGraph`` the whole round runs
+    *inside* ``shard_map`` — per-shard compaction over locally-present
+    vertices, per-shard overflow detection, and per-shard escalation to a
+    shard-local dense relax when a hub-heavy shard outgrows the rung (see
+    ``ShardedGraph.sharded_sparse_round``).
+
+    Returns ``(new_out, escalated_shards)`` — the escalation count is 0 on
+    a single partition, and the number of shards that fell back to their
+    local dense relax on a mesh (labels are bitwise identical either way).
+    """
+    sub = _resolve(substrate)
+    fused = getattr(g, "sharded_sparse_round", None)
+    if fused is not None:
+        if kind == "add" and _deterministic_add:
+            # deterministic float-add wants the one canonical edge order;
+            # a masked dense push over all local edges relaxes the same
+            # message set as the sparse round, with no overflow to manage
+            out = push_dense(g, src_val, mask, out_init, kind, use_weight,
+                             sub)
+            return out, jnp.int32(0)
+        return fused(src_val, mask, out_init, kind, use_weight, capacity,
+                     budget, sub)
+    f = fr.compact(mask, capacity, g.sentinel)
+    batch = advance_sparse(g, f, budget, sub)
+    out = relax_batch(batch, src_val, out_init, kind, use_weight, sub)
+    return out, jnp.int32(0)
 
 
 def direction_choice(

@@ -82,12 +82,24 @@ class PartitionedGraph:
     row_ptr: jax.Array  # (D, n_pad + 1) shard-local CSR offsets
     deg: jax.Array      # (D, n_pad) shard-local per-vertex degree
 
+    # reduce-side ownership metadata (drives sharded.CrossReducer): the
+    # device grid is (rows, cols) — (ndev, 1) for 1-D cuts — and
+    # ``reduce_owner`` maps each vertex to the owner along the reduce
+    # dimension (grid column for CVC, the whole device axis for OEC).  The
+    # partition invariant: every edge's accumulator target (dst for "out",
+    # destination for "in") lands on a shard whose reduce-dimension index
+    # equals ``reduce_owner[target]``.
+    rows: int = dataclasses.field(default=0, metadata=dict(static=True))
+    cols: int = dataclasses.field(default=0, metadata=dict(static=True))
+    reduce_owner: jax.Array = None  # (n_pad,) int32
+
     @property
     def sentinel(self) -> int:
         return self.n_pad - 1
 
 
-def _assemble(shards, n, n_pad, out_deg, scheme, policy) -> PartitionedGraph:
+def _assemble(shards, n, n_pad, out_deg, scheme, policy, rows, cols,
+              reduce_owner) -> PartitionedGraph:
     ndev = len(shards)
     sentinel = n_pad - 1
     epd = round_up(max(max(len(s[0]) for s in shards), 1), 8)
@@ -111,6 +123,8 @@ def _assemble(shards, n, n_pad, out_deg, scheme, policy) -> PartitionedGraph:
         src=jnp.asarray(S), dst=jnp.asarray(D), w=jnp.asarray(W),
         out_deg=jnp.asarray(out_deg),
         row_ptr=jnp.asarray(RP), deg=jnp.asarray(DEG),
+        rows=rows, cols=cols,
+        reduce_owner=jnp.asarray(reduce_owner.astype(np.int32)),
     )
 
 
@@ -137,16 +151,24 @@ def partition_1d(
     shards = [
         (src[owner == i], dst[owner == i], w[owner == i]) for i in range(ndev)
     ]
-    return _assemble(shards, g.n, g.n_pad, np.asarray(g.out_deg), "oec", policy)
+    red_owner = pl.vertex_owner(g.n_pad, g.block_size, ndev, policy)
+    return _assemble(shards, g.n, g.n_pad, np.asarray(g.out_deg), "oec",
+                     policy, ndev, 1, red_owner)
 
 
 def partition_2d(
-    g: Graph, rows: int, cols: int, policy: str = "blocked"
+    g: Graph, rows: int, cols: int, policy: str = "blocked",
+    direction: str = "out"
 ) -> PartitionedGraph:
-    """CVC on an (rows, cols) grid, flattened device-major (row*cols + col)."""
-    src = np.asarray(g.src_idx)[: g.m]
-    dst = np.asarray(g.col_idx)[: g.m]
-    w = np.asarray(g.edge_w)[: g.m]
+    """CVC on an (rows, cols) grid, flattened device-major (row*cols + col).
+
+    The grid row is keyed on the gather side of the relaxation (src for
+    ``direction="out"``, the in-neighbour for ``direction="in"``) and the
+    grid *column* on the scatter side (the accumulator target), so every
+    shard's updates land on vertices its own grid column owns — the
+    invariant the communication-avoiding reducer reduces along columns on.
+    """
+    src, dst, w, _ = _edge_arrays(g, direction)
     r = pl.shard_owner(src, g.n_pad, g.block_size, rows, policy)
     c = pl.shard_owner(dst, g.n_pad, g.block_size, cols, policy)
     owner = r * cols + c
@@ -154,7 +176,9 @@ def partition_2d(
         (src[owner == i], dst[owner == i], w[owner == i])
         for i in range(rows * cols)
     ]
-    return _assemble(shards, g.n, g.n_pad, np.asarray(g.out_deg), "cvc", policy)
+    red_owner = pl.vertex_owner(g.n_pad, g.block_size, cols, policy)
+    return _assemble(shards, g.n, g.n_pad, np.asarray(g.out_deg), "cvc",
+                     policy, rows, cols, red_owner)
 
 
 # ---------------------------------------------------------------------------

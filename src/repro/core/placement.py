@@ -65,6 +65,48 @@ def shard_owner(
     raise ValueError(f"unknown placement policy {policy!r}")
 
 
+def vertex_owner(
+    n_pad: int, block_size: int, ndev: int, policy: Policy
+) -> np.ndarray:
+    """(n_pad,) ownership map: which device (along one mesh axis) owns each
+    vertex's canonical label.
+
+    This is the reduce-side contract of the communication-avoiding reducer
+    (``sharded.CrossReducer``): cross-device label reductions combine
+    per-shard partial accumulators *onto the owner* instead of all-reducing
+    the full vector over every device.  It is ``shard_owner`` evaluated on
+    the identity, so edge homing and label ownership always agree — the
+    invariant the CVC partition relies on (a 2-D shard's destinations are
+    exactly the vertices its grid column owns).
+    """
+    return shard_owner(np.arange(n_pad), n_pad, block_size, ndev, policy)
+
+
+def owner_layout(owner: np.ndarray, ndev: int):
+    """Dense per-owner vertex layout: ``(idx, valid)`` of shape (ndev, L).
+
+    Row d lists the vertices owned by device d in ascending order, padded
+    with the last vertex slot (the sentinel); ``valid`` marks real entries.
+    The valid entries of all rows tile ``[0, n_pad)`` with no gaps or
+    overlaps for every placement policy — the owner-map contract that
+    ``tests/test_placement_partition.py`` property-tests.  L is the max
+    owned count (rounded up to 8 slots), so the layout is rectangular and
+    SPMD-shape-safe inside ``shard_map``.
+    """
+    owner = np.asarray(owner)
+    n_pad = owner.shape[0]
+    counts = np.bincount(owner, minlength=ndev)
+    L = max(int(counts.max()), 1)
+    L = ((L + 7) // 8) * 8
+    idx = np.full((ndev, L), n_pad - 1, np.int32)
+    valid = np.zeros((ndev, L), bool)
+    for d in range(ndev):
+        mine = np.flatnonzero(owner == d).astype(np.int32)
+        idx[d, : len(mine)] = mine
+        valid[d, : len(mine)] = True
+    return idx, valid
+
+
 def interleave_blocks(x: jax.Array, block_size: int, ndev: int) -> jax.Array:
     """Permute blocks so contiguous sharding realises round-robin placement.
 

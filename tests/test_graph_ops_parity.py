@@ -259,6 +259,67 @@ def test_pagerank_bitwise_across_substrates_with_det_add():
                                rtol=1e-6, atol=1e-10)
 
 
+def test_sharded_pagerank_bitwise_across_placement_and_ndev():
+    """The cross-shard deterministic-add item: under deterministic_add the
+    sharded float-add path re-orders the flat edge multiset into one
+    canonical (src, dst, w) order before the fixed-order segmented tree,
+    so pagerank is bitwise identical across every (placement × ndev) cell
+    — AND to the unsharded deterministic result, because from_coo's CSR
+    layout induces the same canonical order.  Runs in a subprocess with 8
+    forced host devices (pattern of test_sharded_invariance.py)."""
+    import subprocess
+    import sys
+    import textwrap
+
+    script = textwrap.dedent(
+        """
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import numpy as np
+        import jax
+        from jax.sharding import Mesh
+
+        from repro.core import from_coo, shard_graph
+        from repro.core import operators as ops
+        from repro.core.algorithms import pagerank
+        from repro.graphs import generators as gen
+
+        src, dst, n = gen.erdos(120, 900, seed=6)
+        g = from_coo(src, dst, n, block_size=16, build_csc=True)
+        devs = np.array(jax.devices())
+
+        with ops.deterministic_add_scope():
+            ref, _ = pagerank.pr_pull(g)          # unsharded deterministic
+            ref = np.asarray(ref)
+            for ndev in (1, 2, 4, 8):
+                mesh = Mesh(devs[:ndev], ("data",))
+                for pol in ("local", "interleaved", "blocked"):
+                    sg = shard_graph(g, mesh, ("data",), policy=pol)
+                    got, st = pagerank.pr_pull(sg)
+                    assert np.array_equal(ref, np.asarray(got)), (ndev, pol)
+                    assert st.ndev == ndev
+            # 2-D CVC cut reorders edges differently again — still bitwise
+            mesh2 = Mesh(devs.reshape(4, 2), ("data", "model"))
+            sg2 = shard_graph(g, mesh2, ("data", "model"), scheme="cvc",
+                              grid=(4, 2))
+            got2, _ = pagerank.pr_pull(sg2)
+            assert np.array_equal(ref, np.asarray(got2))
+        # plain (non-deterministic) sharded mode stays close, not bitwise
+        plain, _ = pagerank.pr_pull(shard_graph(g, Mesh(devs, ("data",))))
+        np.testing.assert_allclose(ref, np.asarray(plain), rtol=1e-6,
+                                   atol=1e-10)
+        print("SHARDED_DET_PAGERANK_OK")
+        """
+    )
+    r = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=900,
+        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+             "HOME": "/root", "JAX_PLATFORMS": "cpu"},
+    )
+    assert "SHARDED_DET_PAGERANK_OK" in r.stdout, r.stdout + r.stderr
+
+
 def test_e2e_pagerank_close_across_backends():
     """pr_pull reduces with float 'add' on non-integer contributions, so the
     substrates may differ by summation order — allclose, not bitwise."""

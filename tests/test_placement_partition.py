@@ -1,0 +1,169 @@
+"""Placement-policy and partition contracts.
+
+Two invariants everything sharded builds on:
+
+* **edge-partition totality** — ``partition_1d``/``partition_2d`` (both
+  directions) assign every real edge to exactly one shard, for all three
+  placement policies: the concatenated shard multisets equal the original
+  edge multiset, nothing dropped, nothing duplicated.
+* **owner-map tiling** — ``placement.vertex_owner`` +
+  ``placement.owner_layout`` tile the padded vertex range with no gaps and
+  no overlaps; this is the contract the communication-avoiding reducer's
+  scatter-back step (``CrossReducer._scatter_back``) silently relies on —
+  a gap would lose labels, an overlap would double-count ``add``.
+
+Plus the 2-D partition's reduce-side invariant: every edge's accumulator
+target lands on a shard whose grid column owns it (what lets the CVC
+reducer reduce along columns only).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import from_coo
+from repro.core import partition as pt
+from repro.core import placement as pl
+from repro.graphs import generators as gen
+
+POLICIES = ("local", "interleaved", "blocked")
+
+
+def build(seed=7, n=60, m=400, csc=True):
+    src, dst, n_ = gen.erdos(n, m, seed=seed)
+    w = gen.random_weights(len(src), seed=seed + 1).astype(np.float32)
+    return from_coo(src, dst, n_, w, block_size=16, build_csc=csc)
+
+
+def edge_multiset(src, dst, w, sentinel):
+    keep = np.asarray(src) != sentinel
+    return sorted(zip(np.asarray(src)[keep].tolist(),
+                      np.asarray(dst)[keep].tolist(),
+                      np.asarray(w)[keep].tolist()))
+
+
+def graph_multiset(g, direction):
+    if direction == "in":
+        return edge_multiset(np.asarray(g.in_col_idx)[: g.m],
+                             np.asarray(g.in_src_idx)[: g.m],
+                             np.asarray(g.in_edge_w)[: g.m], g.sentinel)
+    return edge_multiset(np.asarray(g.src_idx)[: g.m],
+                         np.asarray(g.col_idx)[: g.m],
+                         np.asarray(g.edge_w)[: g.m], g.sentinel)
+
+
+# ---------------------------------------------------------------------------
+# owner maps tile the vertex range
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("ndev", [1, 2, 3, 4, 8])
+def test_owner_map_tiles_vertex_range(policy, ndev):
+    n_pad, block = 128, 16
+    owner = pl.vertex_owner(n_pad, block, ndev, policy)
+    assert owner.shape == (n_pad,)
+    assert owner.min() >= 0 and owner.max() < ndev
+    idx, valid = pl.owner_layout(owner, ndev)
+    assert idx.shape == valid.shape and idx.shape[0] == ndev
+    covered = idx[valid]
+    # no gaps, no overlaps: valid entries are a permutation of [0, n_pad)
+    assert np.array_equal(np.sort(covered), np.arange(n_pad))
+    # rows agree with the owner map
+    for d in range(ndev):
+        assert np.array_equal(np.sort(idx[d][valid[d]]),
+                              np.flatnonzero(owner == d))
+    # padding slots point at the sentinel (harmless scatter target)
+    assert np.all(idx[~valid] == n_pad - 1)
+
+
+def test_owner_layout_ragged_ownership():
+    """'local' puts every vertex on device 0 — the most ragged layout the
+    rectangle has to absorb."""
+    n_pad = 64
+    owner = pl.vertex_owner(n_pad, 16, 4, "local")
+    idx, valid = pl.owner_layout(owner, 4)
+    assert valid[0].sum() == n_pad and valid[1:].sum() == 0
+    assert np.array_equal(np.sort(idx[0][valid[0]]), np.arange(n_pad))
+
+
+# ---------------------------------------------------------------------------
+# every edge lands on exactly one shard
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("direction", ["out", "in"])
+def test_partition_1d_totality(policy, direction):
+    g = build()
+    pg = pt.partition_1d(g, 4, policy=policy, direction=direction)
+    got = edge_multiset(pg.src.reshape(-1), pg.dst.reshape(-1),
+                        pg.w.reshape(-1), pg.sentinel)
+    assert got == graph_multiset(g, direction)
+    assert pg.rows == 4 and pg.cols == 1
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("direction", ["out", "in"])
+@pytest.mark.parametrize("grid", [(2, 2), (4, 2), (1, 4)])
+def test_partition_2d_totality(policy, direction, grid):
+    g = build()
+    rows, cols = grid
+    pg = pt.partition_2d(g, rows, cols, policy=policy, direction=direction)
+    got = edge_multiset(pg.src.reshape(-1), pg.dst.reshape(-1),
+                        pg.w.reshape(-1), pg.sentinel)
+    assert got == graph_multiset(g, direction)
+    assert (pg.rows, pg.cols) == grid
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("direction", ["out", "in"])
+def test_partition_2d_column_owns_targets(policy, direction):
+    """The CVC reduce-side invariant: each shard's accumulator targets
+    (dst) are owned by the shard's own grid column — this is what makes a
+    column-group reduce complete, and it must hold for the in-direction
+    (pull) cut too."""
+    g = build()
+    rows, cols = 2, 3
+    pg = pt.partition_2d(g, rows, cols, policy=policy, direction=direction)
+    owner = np.asarray(pg.reduce_owner)
+    D = np.asarray(pg.dst)
+    for shard in range(rows * cols):
+        col = shard % cols
+        dsts = D[shard][D[shard] != pg.sentinel]
+        assert np.all(owner[dsts] == col), (shard, policy, direction)
+
+
+def test_partition_2d_in_requires_csc():
+    g = build(csc=False)
+    with pytest.raises(AssertionError):
+        pt.partition_2d(g, 2, 2, direction="in")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis layer: random graphs / shapes
+# ---------------------------------------------------------------------------
+
+def test_partition_and_owner_property():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(n=st.integers(4, 80),
+           edges=st.lists(st.tuples(st.integers(0, 79), st.integers(0, 79)),
+                          min_size=1, max_size=150),
+           ndev=st.integers(1, 8),
+           policy=st.sampled_from(POLICIES),
+           seed=st.integers(0, 2**31 - 1))
+    def prop(n, edges, ndev, policy, seed):
+        r = np.random.default_rng(seed)
+        src = np.array([e[0] for e in edges], np.int64) % n
+        dst = np.array([e[1] for e in edges], np.int64) % n
+        w = r.uniform(1, 4, len(src)).astype(np.float32)
+        g = from_coo(src, dst, n, w, block_size=16)
+        pg = pt.partition_1d(g, ndev, policy=policy)
+        got = edge_multiset(pg.src.reshape(-1), pg.dst.reshape(-1),
+                            pg.w.reshape(-1), pg.sentinel)
+        assert got == graph_multiset(g, "out")
+        owner = pl.vertex_owner(g.n_pad, g.block_size, ndev, policy)
+        idx, valid = pl.owner_layout(owner, ndev)
+        assert np.array_equal(np.sort(idx[valid]), np.arange(g.n_pad))
+
+    prop()
