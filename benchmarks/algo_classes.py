@@ -6,17 +6,60 @@ dense vertex programs; on low-diameter rmat/kron the ranking flips (e.g.
 direction-optimizing BFS wins).  We reproduce the full variant × graph
 matrix and report both wall time and the work-efficiency counter
 (edges touched), which is machine-independent.
+
+The full seven-benchmark suite is covered: bfs/sssp/cc variant matrices,
+bc (both sweeps through the seam), kcore dense peel vs the sparse-ladder
+peel (the work-efficiency contrast on the long sparse tail), pagerank, and
+tc — including a subprocess cell that counts triangles **sharded by edge
+chunk over a 4-device mesh** and pins the count against the single-device
+run.  With ``run.py --emit-json`` each row carries its full
+``RunStats.as_dict()``.
 """
 
 from __future__ import annotations
 
+import textwrap
+
 import numpy as np
 
 from repro.core import from_coo
-from repro.core.algorithms import bfs, cc, sssp
+from repro.core.algorithms import bc, bfs, cc, kcore, pagerank, sssp, tc
 from repro.graphs import generators as gen
 
-from .common import bench_graphs, row, time_call
+from .common import bench_graphs, row, run_bench_subprocess, time_call
+
+# tc on a 1- vs 4-device mesh: the sharded edge-chunk dispatch must return
+# the identical exact count while splitting the intersection work D ways
+_TC_SHARDED_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+    import numpy as np
+    import jax
+    from jax.sharding import Mesh
+
+    from repro.core import from_coo, shard_graph
+    from repro.core.algorithms import tc
+    from repro.graphs import generators as gen
+
+    src, dst, n = gen.rmat(9, 10, seed=1)
+    g = from_coo(src, dst, n, block_size=256, symmetrize=True)
+
+    ref, st1 = tc.tc_count(g, edge_chunk=4096)
+    us1 = t(lambda: tc.tc_count(g, edge_chunk=4096)[0])
+    emit("fig7/tc/rmat/dev1", us1,
+         f"count={ref};edges={st1.edges_touched}",
+         dict(st1.as_dict(), count=int(ref), wall_us=us1))
+
+    devs = np.array(jax.devices())
+    mesh = Mesh(devs, ("data",))
+    sg = shard_graph(g, mesh, ("data",), policy="blocked")
+    got, st4 = tc.tc_count(sg, edge_chunk=4096)
+    assert got == ref, (got, ref)
+    us4 = t(lambda: tc.tc_count(sg, edge_chunk=4096)[0])
+    emit("fig7/tc/rmat/dev4", us4,
+         f"count={got};edges={st4.edges_touched};comm_elems={st4.comm_elems}",
+         dict(st4.as_dict(), count=int(got), wall_us=us4))
+""")
 
 
 def run():
@@ -24,7 +67,8 @@ def run():
     for gname, (src, dst, n) in bench_graphs().items():
         w = gen.random_weights(len(src), seed=3)
         g = from_coo(src, dst, n, w, block_size=512, build_csc=True)
-        gsym = from_coo(src, dst, n, block_size=512, symmetrize=True)
+        gsym = from_coo(src, dst, n, block_size=512, symmetrize=True,
+                        build_csc=True)
         source = int(np.argmax(np.bincount(src, minlength=n)))
 
         for vname, fn in bfs.VARIANTS.items():
@@ -32,19 +76,60 @@ def run():
             _, stats = fn(g, source)
             rows.append(row(
                 f"fig6/bfs/{gname}/{vname}", us,
-                f"rounds={stats.rounds};edges={stats.edges_touched}"))
+                f"rounds={stats.rounds};edges={stats.edges_touched}",
+                stats.as_dict()))
 
         for vname, fn in sssp.VARIANTS.items():
             us = time_call(lambda: fn(g, source)[0])
             _, stats = fn(g, source)
             rows.append(row(
                 f"fig6/sssp/{gname}/{vname}", us,
-                f"rounds={stats.rounds};edges={stats.edges_touched}"))
+                f"rounds={stats.rounds};edges={stats.edges_touched}",
+                stats.as_dict()))
 
         for vname, fn in cc.VARIANTS.items():
             us = time_call(lambda: fn(gsym)[0])
             _, stats = fn(gsym)
             rows.append(row(
                 f"fig6/cc/{gname}/{vname}", us,
-                f"rounds={stats.rounds};edges={stats.edges_touched}"))
+                f"rounds={stats.rounds};edges={stats.edges_touched}",
+                stats.as_dict()))
+
+        # bc: both sweeps (2 fwd + 1 bwd relax per level) through the seam
+        us = time_call(lambda: bc.bc_brandes(g, source)[0])
+        _, stats = bc.bc_brandes(g, source)
+        rows.append(row(
+            f"fig7/bc/{gname}/brandes", us,
+            f"rounds={stats.rounds};edges={stats.edges_touched}",
+            stats.as_dict()))
+
+        # kcore: dense peel vs sparse-ladder peel — the work-efficiency
+        # contrast (edges = removed-degree mass vs ladder budget slots)
+        for vname, fn in kcore.VARIANTS.items():
+            us = time_call(lambda: fn(gsym, 4)[0])
+            _, stats = fn(gsym, 4)
+            rows.append(row(
+                f"fig7/kcore/{gname}/{vname}", us,
+                f"rounds={stats.rounds};edges={stats.edges_touched};"
+                f"sparse_rounds={stats.sparse_rounds}",
+                stats.as_dict()))
+
+        for vname, fn in pagerank.VARIANTS.items():
+            us = time_call(lambda: fn(gsym)[0])
+            _, stats = fn(gsym)
+            rows.append(row(
+                f"fig7/pagerank/{gname}/{vname}", us,
+                f"rounds={stats.rounds};edges={stats.edges_touched}",
+                stats.as_dict()))
+
+        # tc single-device (chunked intersect through the seam)
+        count, stats = tc.tc_count(gsym, edge_chunk=8192)
+        us = time_call(lambda: tc.tc_count(gsym, edge_chunk=8192)[0])
+        rows.append(row(
+            f"fig7/tc/{gname}/orient_intersect", us,
+            f"count={count};edges={stats.edges_touched}",
+            dict(stats.as_dict(), count=int(count))))
+
+    # tc sharded-vs-single-device cell (forces its own 4-device subprocess)
+    rows.extend(run_bench_subprocess(_TC_SHARDED_SCRIPT, "fig7/tc/ERROR"))
     return rows

@@ -30,7 +30,6 @@ _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
-    import time
     import numpy as np
     import jax
     from jax.sharding import Mesh
@@ -42,10 +41,6 @@ _SCRIPT = textwrap.dedent("""
     src, dst, n = gen.rmat(10, 12, seed=1)
     g = from_coo(src, dst, n, block_size=512)
     source = int(np.argmax(np.bincount(src, minlength=n)))
-
-    def t(fn):
-        fn(); t0 = time.perf_counter(); out = fn()
-        jax.block_until_ready(out); return (time.perf_counter()-t0)*1e6
 
     devs = np.array(jax.devices())
 

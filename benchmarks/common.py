@@ -5,11 +5,30 @@ from __future__ import annotations
 import json
 import subprocess
 import sys
+import textwrap
 import time
 from typing import Callable
 
 import jax
 import numpy as np
+
+# Helper prelude injected into every ``run_bench_subprocess`` script, so the
+# timing convention and the ROW/STAT emission protocol are defined once, not
+# copy-pasted per suite.  Imports are function-local on purpose: the prelude
+# is prepended *before* the script sets XLA_FLAGS, and jax must not be
+# imported until after that.
+SUBPROC_HELPERS = textwrap.dedent("""
+    def t(fn):
+        import time, jax
+        fn(); t0 = time.perf_counter(); out = fn()
+        jax.block_until_ready(out); return (time.perf_counter()-t0)*1e6
+
+    def emit(name, us, derived, stats=None):
+        import json
+        print(f"ROW,{name},{us:.1f},{derived}")
+        if stats is not None:
+            print("STAT," + name + "," + json.dumps(stats))
+""")
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3) -> float:
@@ -41,11 +60,13 @@ def print_rows(rows):
 def run_bench_subprocess(script: str, error_name: str, timeout: int = 900):
     """Run a benchmark script in a fresh interpreter (suites that force a
     host device count need one) and parse its ``ROW,name,us,derived`` /
-    ``STAT,name,<json>`` protocol into row tuples.  Emits a single
+    ``STAT,name,<json>`` protocol into row tuples.  The ``SUBPROC_HELPERS``
+    prelude (``t``/``emit``) is prepended to every script.  Emits a single
     ``<error_name>,0.0,<stderr tail>`` row when the script produced
     nothing — ``run.py`` treats ``*/ERROR`` rows as suite failure."""
     r = subprocess.run(
-        [sys.executable, "-c", script], capture_output=True, text=True,
+        [sys.executable, "-c", SUBPROC_HELPERS + script],
+        capture_output=True, text=True,
         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
              "JAX_PLATFORMS": "cpu"},
         timeout=timeout,

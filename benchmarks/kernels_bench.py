@@ -30,9 +30,19 @@ def _graph_ops_rows():
     from repro.core.algorithms import bfs
     from repro.graphs import generators as gen
 
+    from repro.core.algorithms import tc
+
     rows = []
     src, dst, n = gen.rmat(10, 12, seed=1)
     g = from_coo(src, dst, n, block_size=512, build_csc=True)
+    gsym = from_coo(src, dst, n, block_size=512, symmetrize=True)
+    adj, osrc, odst = tc.oriented_adjacency(gsym)
+    ochunk = 4096
+    opad = ((int(osrc.shape[0]) + ochunk - 1) // ochunk) * ochunk
+    osrc_p = jnp.pad(osrc, (0, opad - osrc.shape[0]),
+                     constant_values=gsym.sentinel)
+    odst_p = jnp.pad(odst, (0, opad - odst.shape[0]),
+                     constant_values=gsym.sentinel)
     sv = jnp.asarray(RNG.normal(size=g.n_pad).astype(np.float32))
     active = jnp.asarray(RNG.random(g.n_pad) < 0.5).at[g.sentinel].set(False)
     init = g.vertex_full(jnp.finfo(jnp.float32).max, jnp.float32)
@@ -60,6 +70,11 @@ def _graph_ops_rows():
         us = time_call(lambda: adv(sv, init))
         rows.append(row(f"kern/graph_advance_relax[{sub}]", us,
                         f"cap={cap};budget={budget}"))
+        isect = jax.jit(lambda s_, d_, b=sub: ops.intersect_batch(
+            adj, s_, d_, sentinel=gsym.sentinel, substrate=b))
+        us = time_call(lambda: isect(osrc_p[:ochunk], odst_p[:ochunk]))
+        rows.append(row(f"kern/graph_intersect[{sub}]", us,
+                        f"chunk={ochunk};dmax={adj.shape[1]}"))
         with ops.substrate_scope(sub):
             us = time_call(lambda: bfs.bfs_dd_sparse(g, 0)[0])
             _, stats = bfs.bfs_dd_sparse(g, 0)

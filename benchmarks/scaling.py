@@ -32,8 +32,6 @@ from .common import run_bench_subprocess
 _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import json
-    import time
     import numpy as np
     import jax
     from jax.sharding import Mesh
@@ -47,15 +45,6 @@ _SCRIPT = textwrap.dedent("""
     source = int(np.argmax(np.bincount(src, minlength=n)))
     total_bytes = sum(a.size * a.dtype.itemsize
                       for a in (g.col_idx, g.src_idx, g.edge_w))
-
-    def t(fn):
-        fn(); t0 = time.perf_counter(); out = fn()
-        jax.block_until_ready(out); return (time.perf_counter()-t0)*1e6
-
-    def emit(name, us, derived, stats=None):
-        print(f"ROW,{name},{us:.1f},{derived}")
-        if stats is not None:
-            print("STAT," + name + "," + json.dumps(stats))
 
     devs = np.array(jax.devices())
     for d in (1, 2, 4, 8):

@@ -14,16 +14,13 @@ the round-count gap between label-prop (diameter-bound) and pointer-jumping
 
 from __future__ import annotations
 
-import subprocess
-import sys
 import textwrap
 
-from .common import row
+from .common import run_bench_subprocess
 
 _SCRIPT = textwrap.dedent("""
     import os
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-    import time
     import numpy as np
     import jax
 
@@ -35,10 +32,6 @@ _SCRIPT = textwrap.dedent("""
     g = from_coo(src, dst, n, block_size=512, symmetrize=True)
     s = np.asarray(g.src_idx)[:g.m]
     source = int(np.argmax(np.bincount(s, minlength=n)))
-
-    def t(fn):
-        fn(); t0 = time.perf_counter(); out = fn()
-        jax.block_until_ready(out); return (time.perf_counter()-t0)*1e6
 
     # --- OB: best algorithms, single partition
     us = t(lambda: bfs.bfs_dd_sparse(g, source)[0])
@@ -73,17 +66,4 @@ _SCRIPT = textwrap.dedent("""
 
 
 def run():
-    rows = []
-    r = subprocess.run(
-        [sys.executable, "-c", _SCRIPT], capture_output=True, text=True,
-        env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin", "HOME": "/root",
-             "JAX_PLATFORMS": "cpu"},
-        timeout=900,
-    )
-    for line in r.stdout.splitlines():
-        if line.startswith("ROW,"):
-            _, name, us, derived = line.split(",", 3)
-            rows.append(row(name, float(us), derived))
-    if not rows:
-        rows.append(row("fig11/ERROR", 0.0, r.stderr[-200:].replace(",", ";")))
-    return rows
+    return run_bench_subprocess(_SCRIPT, "fig11/ERROR")

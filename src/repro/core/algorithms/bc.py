@@ -4,6 +4,27 @@ Forward sweep: BFS levels + shortest-path counts sigma (bulk-synchronous,
 level by level).  Backward sweep: dependency accumulation from the deepest
 level back to the source.  Both sweeps are edge-parallel with dense masks —
 bc is the one benchmark where level-synchronous execution is inherent.
+
+Every edge scatter lowers through the ``operators`` substrate seam, so bc
+inherits the Pallas kernels, sharded shard_map dispatch, and the
+deterministic-add mode like the rest of the suite:
+
+* level discovery is a ``push_dense(kind="min")`` carrying ``dist + 1`` as
+  the source value (weight-free: bc is a hop-count algorithm even on
+  weighted graphs, exactly like the pre-seam formulation);
+* sigma accumulation is a ``push_dense(kind="add")`` of sigma from the
+  current level, accepted only at vertices the min-relax just discovered
+  (``new_dist == lvl+1`` — exactly the tree edges, filtered per *vertex*
+  instead of per edge so the scatter stays a plain seam op);
+* the backward sweep pushes ``(1 + delta[v]) / sigma[v]`` along **reversed**
+  edges (``push_dense(..., reverse=True)`` — gather at the edge
+  destination, scatter into its source), accepted only at vertices on the
+  current level, then scales by sigma[u] vertex-side.
+
+Under ``operators.set_deterministic_add(True)`` both float accumulations
+run through the canonical fixed-order tree, so betweenness scores are
+bitwise reproducible across substrate × placement × ndev × reducer —
+pinned in ``tests/test_sharded_invariance.py``.
 """
 
 from __future__ import annotations
@@ -11,6 +32,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from .. import operators as ops
 from ..engine import RunStats
 from ..graph import Graph
 
@@ -19,22 +41,27 @@ INF = jnp.float32(jnp.finfo(jnp.float32).max / 4)
 
 def bc_brandes(g: Graph, src: int, max_rounds: int = 100_000):
     n_pad = g.n_pad
-    s_idx, d_idx = g.src_idx, g.col_idx
+    zeros = jnp.zeros((n_pad,), jnp.float32)
 
     dist0 = jnp.full((n_pad,), INF, jnp.float32).at[src].set(0.0)
-    sigma0 = jnp.zeros((n_pad,), jnp.float32).at[src].set(1.0)
+    sigma0 = zeros.at[src].set(1.0)
 
     # ---------------- forward: levels + path counts ----------------
     def fwd_body(carry):
         lvl, dist, sigma, _ = carry
-        on_lvl = dist == lvl.astype(jnp.float32)
-        # discover: neighbours of current level at dist lvl+1
-        cand = jnp.where(on_lvl[s_idx], lvl + 1.0, INF)
-        new_dist = dist.at[d_idx].min(cand)
-        # count paths: sum sigma over tree edges into the *new* level
-        is_tree = on_lvl[s_idx] & (new_dist[d_idx] == lvl + 1.0)
-        add = jnp.where(is_tree, sigma[s_idx], 0.0)
-        new_sigma = sigma.at[d_idx].add(add)
+        lvlf = lvl.astype(jnp.float32)
+        on_lvl = dist == lvlf
+        # discover: min-relax dist[u] + 1 from the current level (weight-
+        # free — the +1 rides in the carried value, so bc stays a hop-count
+        # sweep on weighted graphs too)
+        new_dist = ops.push_dense(g, dist + 1.0, on_lvl, dist, kind="min",
+                                  use_weight=False)
+        # count paths: sum sigma over out-edges of the current level; only
+        # vertices discovered this round (dist exactly lvl+1) accept — the
+        # accepted contributions are exactly the tree-edge sums
+        inc = ops.push_dense(g, sigma, on_lvl, zeros, kind="add",
+                             use_weight=False)
+        new_sigma = sigma + jnp.where(new_dist == lvlf + 1.0, inc, 0.0)
         changed = jnp.any(new_dist != dist)
         return lvl + 1, new_dist, new_sigma, changed
 
@@ -48,18 +75,20 @@ def bc_brandes(g: Graph, src: int, max_rounds: int = 100_000):
     max_lvl = lvl  # deepest discovered level + 1
 
     # ---------------- backward: dependency accumulation ----------------
-    delta0 = jnp.zeros((n_pad,), jnp.float32)
+    delta0 = zeros
 
     def bwd_body(carry):
         l, delta = carry
         lvlf = l.astype(jnp.float32)
-        on_lvl = dist[s_idx] == lvlf
-        is_tree = on_lvl & (dist[d_idx] == lvlf + 1.0)
-        safe_sig = jnp.maximum(sigma[d_idx], 1e-30)
-        contrib = jnp.where(
-            is_tree, sigma[s_idx] / safe_sig * (1.0 + delta[d_idx]), 0.0
-        )
-        delta = delta.at[s_idx].add(contrib)
+        on_next = dist == lvlf + 1.0
+        # (1 + delta[v]) / sigma[v] for the lvl+1 vertices (sigma >= 1
+        # wherever on_next holds; the clamp only touches masked-out slots)
+        val = jnp.where(on_next, (1.0 + delta) / jnp.maximum(sigma, 1.0), 0.0)
+        # reversed push: out-edges u -> v scatter val[v] into u; only
+        # vertices on level lvl accept, so exactly the tree edges count
+        inc = ops.push_dense(g, val, on_next, zeros, kind="add",
+                             use_weight=False, reverse=True)
+        delta = delta + jnp.where(dist == lvlf, sigma * inc, 0.0)
         return l - 1, delta
 
     def bwd_cond(carry):
@@ -68,9 +97,19 @@ def bc_brandes(g: Graph, src: int, max_rounds: int = 100_000):
 
     _, delta = jax.lax.while_loop(bwd_cond, bwd_body, (max_lvl - 1, delta0))
     bc = delta.at[src].set(0.0)
-    rounds = int(lvl) * 2
-    return bc, RunStats(rounds=rounds, edges_touched=rounds * g.m,
-                        dense_rounds=rounds)
+
+    # work accounting: each forward round is two full-edge relaxes
+    # (discovery min + sigma add), each backward round one reversed relax —
+    # charged at the reverse-safe reducer's comm rate, since a reversed
+    # scatter on a 2-D cut executes through the full-mesh reduce
+    fwd_rounds = int(lvl)
+    bwd_rounds = int(max_lvl)
+    relaxes = 2 * fwd_rounds + bwd_rounds
+    stats = RunStats.from_graph(
+        g, relaxes=2 * fwd_rounds, rounds=fwd_rounds + bwd_rounds,
+        edges_touched=relaxes * g.m, dense_rounds=fwd_rounds + bwd_rounds)
+    stats.add_comm(g, relaxes=bwd_rounds, reverse=True)
+    return bc, stats
 
 
 VARIANTS = {"brandes": bc_brandes}

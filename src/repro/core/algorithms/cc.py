@@ -99,7 +99,11 @@ def cc_pointer_jump(g: Graph, max_rounds: int = 10_000):
         pv = par[g.col_idx]
         lo = jnp.minimum(pu, pv)
         hi = jnp.maximum(pu, pv)
-        hooked = par.at[hi].min(lo)
+        # the hook scatters to a *label*-derived destination (the larger
+        # representative), not an edge endpoint — the non-vertex operator
+        # the paper celebrates.  It still lowers through the kernel layer's
+        # scatter primitive rather than a raw .at[] edge scatter.
+        hooked = ops.scatter_reduce(hi, lo, par, "min")
         jumped = full_jump(hooked)
         return jumped, jnp.any(jumped != par)
 

@@ -4,6 +4,21 @@ The frontier is the set of vertices removed this round — a naturally sparse
 worklist (the paper's k=100 on web-crawls peels long sparse tails, which is
 exactly where dense-worklist frameworks waste work).
 
+Two variants:
+
+* ``kcore_peel``      — fused dense rounds in one ``lax.while_loop`` (the
+  bulk-synchronous class).  ``edges_touched`` charges the *removed-vertex
+  degree mass* (each vertex is removed exactly once, so the total is the
+  out-degree sum of everything peeled), not rounds × m — the paper's
+  work-efficiency counter for frontier-driven peeling.
+* ``kcore_dd_sparse`` — the same peel through ``SparseLadderEngine``: the
+  removal frontier compacts into a sparse worklist, the degree decrements
+  run as a merge-path ``sparse_round(kind="add")``, and the long sparse
+  tail costs O(budget) per round instead of O(m).  Runs unmodified on a
+  ``ShardedGraph`` with per-shard ladders and per-shard escalation; int32
+  decrements reduce exactly, so alive masks are bitwise identical across
+  every (substrate × placement × ndev × reducer) cell.
+
 Graphs must be symmetrized; degree = out-degree of the symmetric graph.
 """
 
@@ -13,7 +28,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import operators as ops
-from ..engine import RunStats, run_dense
+from ..engine import RunStats, SparseLadderEngine, run_dense
 from ..graph import Graph
 
 
@@ -24,7 +39,7 @@ def kcore_peel(g: Graph, k: int, max_rounds: int = 100_000):
     alive0 = valid
 
     def step(state):
-        alive, deg, _ = state
+        alive, deg, work, _ = state
         remove = alive & (deg < k)
         # subtract 1 from each neighbour of a removed vertex
         ones = jnp.ones((g.n_pad,), jnp.int32)
@@ -34,16 +49,63 @@ def kcore_peel(g: Graph, k: int, max_rounds: int = 100_000):
         )
         alive = alive & ~remove
         deg = deg - dec
-        return alive, deg, jnp.any(remove)
+        work = work + jnp.sum(jnp.where(remove, g.out_deg, 0))
+        return alive, deg, work, jnp.any(remove)
 
-    rounds, (alive, deg, _) = run_dense(
+    rounds, (alive, deg, work, _) = run_dense(
         step,
-        (alive0, deg0, jnp.bool_(True)),
-        lambda s: s[2],
+        (alive0, deg0, jnp.int32(0), jnp.bool_(True)),
+        lambda s: s[3],
         max_rounds,
     )
-    return alive, RunStats(rounds=int(rounds), edges_touched=int(rounds) * g.m,
-                           dense_rounds=int(rounds))
+    return alive, RunStats.from_graph(
+        g, relaxes=int(rounds), rounds=int(rounds),
+        edges_touched=int(work), dense_rounds=int(rounds))
+
+
+def _kcore_sparse_step(k: int):
+    def step(g, state, mask, *, capacity: int, budget: int):
+        alive, deg = state
+        ones = jnp.ones((g.n_pad,), jnp.int32)
+        dec, esc = ops.sparse_round(
+            g, ones, mask, jnp.zeros((g.n_pad,), jnp.int32),
+            kind="add", use_weight=False, capacity=capacity, budget=budget,
+        )
+        alive = alive & ~mask
+        deg = deg - dec
+        # every alive sub-k vertex was removed in an earlier round, so the
+        # new frontier is exactly the vertices that just dropped below k
+        return (alive, deg), alive & (deg < k), esc
+    return step
+
+
+def _kcore_dense_step(k: int):
+    def step(g, state, mask):
+        alive, deg = state
+        ones = jnp.ones((g.n_pad,), jnp.int32)
+        dec = ops.push_dense(
+            g, ones, mask, jnp.zeros((g.n_pad,), jnp.int32),
+            kind="add", use_weight=False,
+        )
+        alive = alive & ~mask
+        deg = deg - dec
+        return (alive, deg), alive & (deg < k)
+    return step
+
+
+def kcore_dd_sparse(g: Graph, k: int, max_rounds: int = 100_000):
+    """Peel over the sparse-worklist ladder: the frontier is this round's
+    removal set (the paper's long-sparse-tail workload).  Dense fallback
+    rounds charge the frontier's degree mass (``dense_cost="mass"``), the
+    same work convention as ``kcore_peel``."""
+    valid = g.valid_vertex_mask()
+    deg0 = g.out_deg.astype(jnp.int32)
+    alive0 = valid
+    mask0 = alive0 & (deg0 < k)
+    eng = SparseLadderEngine(g, _kcore_sparse_step(k), _kcore_dense_step(k),
+                             dense_cost="mass")
+    (alive, _), _ = eng.run((alive0, deg0), mask0, max_rounds)
+    return alive, eng.stats
 
 
 def core_numbers(g: Graph, k_max: int = 64):
@@ -74,4 +136,4 @@ def core_numbers(g: Graph, k_max: int = 64):
     return core
 
 
-VARIANTS = {"peel": kcore_peel}
+VARIANTS = {"peel": kcore_peel, "dd_sparse": kcore_dd_sparse}

@@ -99,12 +99,11 @@ def sssp_delta(
     light = g.edge_w <= delta
 
     def relax(dist, mask, edge_sel):
-        """Relax the selected edge subset from active sources."""
-        s, d, w = g.src_idx, g.col_idx, g.edge_w
-        msg = dist[s] + w
-        neutral = ops.neutral_for("min", dist.dtype)
-        msg = jnp.where(mask[s] & edge_sel, msg, neutral)
-        return dist.at[d].min(msg)
+        """Relax the selected edge subset from active sources: a per-edge
+        activation (light/heavy × active-source), so it lowers through the
+        seam's per-edge-masked relax rather than a vertex-masked push."""
+        return ops.relax_edges(g, dist, mask[g.src_idx] & edge_sel, dist,
+                               kind="min", use_weight=True)
 
     def outer_body(state):
         dist, pending, bidx, inner_total = state

@@ -6,23 +6,40 @@ out-degree is O(sqrt(m)) on power-law graphs.  Each directed edge (u,v)
 intersects N+(u) with N+(v) by binary search over the padded, sorted oriented
 adjacency — an MXU-free, VPU-friendly formulation (the gather/searchsorted
 pattern is the same irregular-access shape the paper's P3 is about).
+
+The intersection lowers through ``operators.intersect_batch`` — the same
+substrate seam as the relaxation ops, with a jnp reference body and a
+blocked Pallas kernel (``kernels/graph_ops``).  On a ``ShardedGraph`` the
+canonical oriented edge list is sharded by **edge chunk** over the mesh
+(``ShardedGraph.sharded_intersect``): each device counts its slice, one
+``psum`` combines the exact int32 partials, so the count is identical —
+and equal to the single-device count — at every (placement, ndev, chunk).
 """
 
 from __future__ import annotations
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 
+from .. import operators as ops
 from ..engine import RunStats
-from ..graph import Graph
+from ..graph import Graph, round_up
 
 
 def oriented_adjacency(g: Graph, pad_to_block: bool = True):
     """Host-side: build (n_pad, dmax) sorted oriented adjacency (sentinel-padded)
-    plus the oriented edge list.  Graph must be symmetric."""
-    src = np.asarray(g.src_idx)[: g.m]
-    dst = np.asarray(g.col_idx)[: g.m]
+    plus the oriented edge list.  Graph must be symmetric.
+
+    Real edges are recovered from the flat views by filtering sentinel
+    padding (on a ``ShardedGraph`` the per-shard padding is interleaved, so
+    a ``[:m]`` slice would mix real and padded slots); the subsequent
+    lexsort makes the oriented list canonical whatever the partition order.
+    """
+    src_all = np.asarray(g.src_idx)
+    dst_all = np.asarray(g.col_idx)
+    real = src_all != g.sentinel
+    src = src_all[real].astype(np.int64)
+    dst = dst_all[real].astype(np.int64)
     deg = np.asarray(g.out_deg)
     # rank = (degree, id) lexicographic
     rank = deg.astype(np.int64) * (g.n_pad + 1) + np.arange(g.n_pad)
@@ -38,37 +55,52 @@ def oriented_adjacency(g: Graph, pad_to_block: bool = True):
     idx_in_row = np.arange(osrc.shape[0]) - starts[osrc]
     adj[osrc, idx_in_row] = odst
     adj.sort(axis=1)  # sentinel (large) sorts to the end; rows stay sorted
-    return jnp.asarray(adj), jnp.asarray(osrc), jnp.asarray(odst)
+    return (jnp.asarray(adj), jnp.asarray(osrc.astype(np.int32)),
+            jnp.asarray(odst.astype(np.int32)))
 
 
 def tc_count(g: Graph, edge_chunk: int = 32_768):
-    """Total triangle count. Returns (count, stats)."""
+    """Total triangle count. Returns (count, stats).
+
+    ``edge_chunk`` bounds the (chunk, dmax) gather working set per
+    intersect dispatch; the count is exact int32 arithmetic, so it is
+    invariant to the chunk size (pinned in test_algorithm_properties).
+    """
     adj, osrc, odst = oriented_adjacency(g)
     dmax = adj.shape[1]
-    ne = osrc.shape[0]
-    ne_pad = ((ne + edge_chunk - 1) // edge_chunk) * edge_chunk if ne else edge_chunk
+    ne = int(osrc.shape[0])
+
+    sharded = getattr(g, "sharded_intersect", None)
+    if sharded is not None and g.ndev > 1:
+        # shard the canonical oriented list by edge chunk over the mesh:
+        # each device's slice is a multiple of edge_chunk, the substrate
+        # kernel blocks within it, and one psum combines exact partials
+        per = round_up(max(ne, 1), g.ndev * edge_chunk) // g.ndev
+        pad = g.ndev * per - ne
+        osrc = jnp.pad(osrc, (0, pad), constant_values=g.sentinel)
+        odst = jnp.pad(odst, (0, pad), constant_values=g.sentinel)
+        count = sharded(adj, osrc.reshape(g.ndev, per),
+                        odst.reshape(g.ndev, per), ops.get_substrate())
+        total = int(count)
+        chunks = (g.ndev * per) // edge_chunk
+        stats = RunStats.from_graph(g, rounds=max(chunks, 1),
+                                    edges_touched=g.ndev * per * dmax)
+        # the only cross-device traffic is the single int32 partial-count psum
+        stats.add_comm(g, relaxes=0, scalar_collectives=1)
+        return total, stats
+
+    ne_pad = round_up(max(ne, 1), edge_chunk)
     pad = ne_pad - ne
     osrc = jnp.pad(osrc, (0, pad), constant_values=g.sentinel)
     odst = jnp.pad(odst, (0, pad), constant_values=g.sentinel)
 
-    @jax.jit
-    def count_chunk(s_chunk, d_chunk):
-        nu = adj[s_chunk]            # (chunk, dmax) candidates w in N+(u)
-        nv = adj[d_chunk]            # (chunk, dmax) sorted targets
-        pos = jax.vmap(jnp.searchsorted)(nv, nu)       # (chunk, dmax)
-        pos = jnp.clip(pos, 0, dmax - 1)
-        hit = jnp.take_along_axis(nv, pos, axis=1) == nu
-        hit &= nu != g.sentinel
-        return jnp.sum(hit.astype(jnp.int32))
-
     total = 0  # python int accumulator — exact at any scale
     for c in range(0, ne_pad, edge_chunk):
-        total = total + int(count_chunk(
-            jax.lax.dynamic_slice(osrc, (c,), (edge_chunk,)),
-            jax.lax.dynamic_slice(odst, (c,), (edge_chunk,)),
-        ))
-    stats = RunStats(rounds=max(ne_pad // edge_chunk, 1),
-                     edges_touched=int(ne_pad) * dmax)
+        total = total + int(ops.intersect_batch(
+            adj, osrc[c:c + edge_chunk], odst[c:c + edge_chunk],
+            sentinel=g.sentinel))
+    stats = RunStats.from_graph(g, rounds=max(ne_pad // edge_chunk, 1),
+                                edges_touched=int(ne_pad) * dmax)
     return total, stats
 
 

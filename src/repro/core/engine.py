@@ -85,14 +85,17 @@ class RunStats:
         st.add_comm(g, relaxes)
         return st
 
-    def add_comm(self, g, relaxes: int = 1, scalar_collectives: int = 0):
+    def add_comm(self, g, relaxes: int = 1, scalar_collectives: int = 0,
+                 reverse: bool = False):
         """Accumulate the analytic comm model for ``relaxes`` label
         reductions on ``g`` (no-op for an unsharded ``Graph``), plus any
-        scalar flag collectives (charged as one element per device pair)."""
+        scalar flag collectives (charged as one element per device pair).
+        ``reverse`` charges reversed-scatter relaxes at the reverse-safe
+        reducer's rate (cvc2d executes them full-mesh)."""
         model = getattr(g, "comm_per_relax", None)
         if model is None:
             return
-        e, b, h = model()
+        e, b, h = model(reverse=True) if reverse else model()
         d = getattr(g, "ndev", 1)
         flag = scalar_collectives * d * (d - 1) if d > 1 else 0
         self.comm_elems += e * relaxes + flag
@@ -136,7 +139,17 @@ class SparseLadderEngine:
         dense_step: Callable,   # (g, labels, frontier_mask) -> (labels, mask)
         ladder_base: int = 4,
         budget_factor: int = 4,
+        dense_cost: str = "m",
     ):
+        # ``labels`` may be any pytree (kcore threads an (alive, degree)
+        # pair); only ``mask`` must be an (n_pad,) bool frontier bitmap.
+        # ``dense_cost`` selects what a dense round charges to
+        # ``edges_touched``: ``"m"`` (every edge slot — the relax really
+        # touches all of them) or ``"mass"`` (the frontier's out-degree
+        # mass — the paper's work-efficiency convention for peel-style
+        # algorithms whose dense rounds are still frontier-driven).
+        assert dense_cost in ("m", "mass"), dense_cost
+        self.dense_cost = dense_cost
         self.g = g
         self.cap_ladder = fr.ladder_capacities(g.n_pad, g.block_size, ladder_base)
         # budgets are per merge-path expansion: per-device on a sharded
@@ -192,10 +205,10 @@ class SparseLadderEngine:
     def _get_scalars(self):
         """One jitted device-side reduction of every scalar the ladder
         needs for the next round — (frontier size, max per-shard local
-        frontier, median per-shard edge mass) — fetched in a single
-        transfer.  The relax/reduce of the round that produced ``mask``
-        keeps executing underneath the fetch (async dispatch), so rung
-        selection overlaps the cross-device reduce."""
+        frontier, median per-shard edge mass, total frontier edge mass) —
+        fetched in a single transfer.  The relax/reduce of the round that
+        produced ``mask`` keeps executing underneath the fetch (async
+        dispatch), so rung selection overlaps the cross-device reduce."""
         if self._scalars is None:
             shard_deg = getattr(self.g, "shard_deg", None)
             if shard_deg is not None and getattr(self.g, "ndev", 1) > 1:
@@ -206,11 +219,13 @@ class SparseLadderEngine:
                     masses = jnp.sum(
                         jnp.where(mask[None, :], g.shard_deg, 0), axis=1)
                     srt = jnp.sort(masses)
-                    return count, jnp.max(counts), srt[srt.shape[0] // 2]
+                    return (count, jnp.max(counts), srt[srt.shape[0] // 2],
+                            jnp.sum(masses))
             else:
                 def scal(g, mask):
                     count = jnp.sum(mask.astype(jnp.int32))
-                    return count, count, g.budget_edge_mass(mask)
+                    mass = g.budget_edge_mass(mask)
+                    return count, count, mass, mass
             self._scalars = jax.jit(scal)
         return self._scalars
 
@@ -231,7 +246,7 @@ class SparseLadderEngine:
         # max sparse budget: don't bother with sparse when it costs ~ dense
         sparse_cutoff = self.budget_ladder[-1] // 2
         for _ in range(max_rounds):
-            count, cap_need, mass_med = (
+            count, cap_need, mass_med, mass_tot = (
                 int(x) for x in jax.device_get(self._get_scalars()(g, mask)))
             if count == 0:
                 break
@@ -254,7 +269,8 @@ class SparseLadderEngine:
             if mass_med > sparse_cutoff or overflow:
                 labels, mask = self._get_dense()(g, labels, mask)
                 self.stats.dense_rounds += 1
-                self.stats.edges_touched += g.m
+                self.stats.edges_touched += (
+                    mass_tot if self.dense_cost == "mass" else g.m)
                 self.stats.add_comm(g, relaxes=1)
             else:
                 labels, mask, esc = self._get_sparse(cap, budget)(

@@ -12,8 +12,17 @@ These are the engine's "operator" layer in the paper's classification (§5.1):
   3M-degree hub and a degree-1 leaf cost the same per-slot work (this is the
   TPU/static-shape rendition of Galois's per-thread chunked worklists; on
   GPUs the same trick is known from merge-based SpMV).  Cost O(budget).
+* ``relax_edges`` — full edge list under a **per-edge** validity mask, for
+  algorithms whose activation is a property of the edge, not the source
+  vertex (delta-stepping's light/heavy split).
+* ``intersect_batch`` — triangle counting's oriented sorted-intersection
+  count over an edge batch (exact int32; bitwise identical everywhere).
 * ``direction_choice`` — Beamer's α/β heuristic for direction-optimizing
   traversal, used by bfs_dirop (the paper's §5.2 comparison point).
+
+``push_dense(..., reverse=True)`` pushes along reversed edges (gather at
+the destination, scatter into the source) — bc's backward dependency sweep
+— without materialising a CSC mirror.
 
 Every relaxation op lowers through a selectable **substrate**:
 
@@ -136,6 +145,7 @@ def push_dense(
     kind: str = "min",
     use_weight: bool = True,
     substrate: str | None = None,
+    reverse: bool = False,
 ) -> jax.Array:
     """Relax every edge whose source is active.
 
@@ -144,6 +154,14 @@ def push_dense(
     ``out_init``: (n_pad,) accumulator initial value.
     Message is ``src_val[src] + w`` for min/max ("tropical" relax) and
     ``src_val[src] * w`` for add (weighted contribution).
+
+    ``reverse=True`` pushes along the *reversed* edges without needing a
+    CSC mirror: the message is gathered from each edge's destination and
+    scattered into its source (bc's backward dependency sweep).  On a
+    2-D-cut ``ShardedGraph`` the reversed scatter breaks the column-
+    ownership invariant the CVC reducer exploits, so that cell degrades
+    to the full-mesh reduce (owner-targeted 1-D reduce-scatter is a full
+    reduction and stays).
     """
     sub = _resolve(substrate)
     sharded = getattr(g, "sharded_push_dense", None)
@@ -152,17 +170,20 @@ def push_dense(
             # canonical-order fixed tree over the flat edge multiset:
             # bitwise identical across placement × ndev AND to the
             # single-device deterministic path (see sharded._det_add_flat)
-            return g.sharded_det_push(src_val, active, out_init, use_weight)
-        return sharded(src_val, active, out_init, kind, use_weight, sub)
+            return g.sharded_det_push(src_val, active, out_init, use_weight,
+                                      reverse)
+        return sharded(src_val, active, out_init, kind, use_weight, sub,
+                       reverse)
+    s, d = (g.col_idx, g.src_idx) if reverse else (g.src_idx, g.col_idx)
     if kind == "add" and _deterministic_add:
-        return gk.det_push_ref(g.src_idx, g.col_idx, g.edge_w, src_val,
+        return gk.det_push_ref(s, d, g.edge_w, src_val,
                                active, out_init, use_weight)
     if sub == "pallas":
         return gk.edge_relax(
-            g.src_idx, g.col_idx, g.edge_w, active, src_val, out_init,
+            s, d, g.edge_w, active, src_val, out_init,
             kind=kind, use_weight=use_weight, vertex_mask=True,
         )
-    return gk.push_ref(g.src_idx, g.col_idx, g.edge_w, src_val, active,
+    return gk.push_ref(s, d, g.edge_w, src_val, active,
                        out_init, kind, use_weight)
 
 
@@ -263,6 +284,63 @@ def relax_batch(
         )
     return gk.relax_ref(batch.src, batch.dst, batch.w, batch.valid, src_val,
                         out_init, kind, use_weight)
+
+
+def relax_edges(
+    g: Graph,
+    src_val: jax.Array,
+    edge_mask: jax.Array,
+    out_init: jax.Array,
+    kind: str = "min",
+    use_weight: bool = True,
+    substrate: str | None = None,
+) -> jax.Array:
+    """Relax the graph's full out-edge list under a **per-edge** validity
+    mask — for algorithms whose activation is a property of the edge, not
+    the source vertex (delta-stepping's light/heavy split).  ``edge_mask``
+    is (m_pad,)-aligned with the flat edge views; on a ``ShardedGraph`` it
+    is resharded with the edges and the relax runs shard-local + cross-
+    device reduce like every other operator."""
+    sub = _resolve(substrate)
+    sharded = getattr(g, "sharded_relax_edges", None)
+    if sharded is not None:
+        if kind == "add" and _deterministic_add:
+            return g.sharded_det_relax_edges(src_val, edge_mask, out_init,
+                                             use_weight)
+        return sharded(src_val, edge_mask, out_init, kind, use_weight, sub)
+    if kind == "add" and _deterministic_add:
+        return gk.det_relax_ref(g.src_idx, g.col_idx, g.edge_w, edge_mask,
+                                src_val, out_init, use_weight)
+    if sub == "pallas":
+        return gk.edge_relax(
+            g.src_idx, g.col_idx, g.edge_w, edge_mask, src_val, out_init,
+            kind=kind, use_weight=use_weight, vertex_mask=False,
+        )
+    return gk.relax_ref(g.src_idx, g.col_idx, g.edge_w, edge_mask, src_val,
+                        out_init, kind, use_weight)
+
+
+def intersect_batch(
+    adj: jax.Array,
+    src: jax.Array,
+    dst: jax.Array,
+    *,
+    sentinel: int,
+    substrate: str | None = None,
+) -> jax.Array:
+    """Oriented sorted-intersection count for a batch of oriented edges —
+    triangle counting's operator (tc's chunked loop and its sharded
+    edge-chunk dispatch both lower through this seam).
+
+    ``adj`` is the (n_pad, dmax) sorted oriented adjacency (sentinel-padded
+    rows; ``adj[sentinel]`` all-sentinel), ``src``/``dst`` the oriented
+    edge endpoints (sentinel on padding slots).  Returns the exact int32
+    sum of |N+(src_i) ∩ N+(dst_i)| — bitwise identical across substrates,
+    chunk sizes and shard partitions (integer reduction)."""
+    sub = _resolve(substrate)
+    if sub == "pallas":
+        return gk.intersect_count(adj, src, dst, sentinel=sentinel)
+    return gk.intersect_ref(adj, src, dst, sentinel)
 
 
 def sparse_round(

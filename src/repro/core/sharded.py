@@ -193,8 +193,12 @@ class CrossReducer:
             idx = jnp.take(self.own_idx, j, axis=0)        # (L,) column slice
             part = work[idx]
             # reduce along the grid column group only: the R devices of
-            # column j hold every contribution to j's owned vertices
-            red = _cross_reduce(part, (r_ax,), kind if not widened else "max")
+            # column j hold every contribution to j's owned vertices.  The
+            # widened (bool→uint8) accumulator keeps the caller's kind:
+            # _cross_reduce already maps "or" to pmax on uint8, and a bool
+            # "min" (AND) must stay pmin — substituting max here would
+            # silently compute OR for it
+            red = _cross_reduce(part, (r_ax,), kind)
             # rebuild the replicated vector: gather owned slices along rows
             gat = jax.lax.all_gather(red, c_ax)            # (C, L)
             out = self._scatter_back(gat, self.own_valid, kind, acc.shape[0],
@@ -279,6 +283,12 @@ def _det_add_flat(src, dst, w, src_val, out_init, use_weight,
     path exactly (``from_coo`` lays edges out (src, dst)-sorted): sharded
     float sums are bitwise identical across every placement × ndev cell
     *and* to the unsharded deterministic result.
+
+    Caveat (same as the ROADMAP's): duplicate (src, dst) pairs with
+    different weights tie-break by weight here but by input position in
+    ``from_coo``'s layout, so the unsharded-identity claim holds for
+    deduplicated graphs — ``from_coo(dedup=True)``, the default, removes
+    such multi-edges.
     """
     order = jnp.lexsort((w, dst, src))
     s, d, ww = src[order], dst[order], w[order]
@@ -413,13 +423,16 @@ class ShardedGraph:
         return CrossReducer(mode="full", axes=self.axes, rows=self.ndev,
                             cols=1)
 
-    def comm_per_relax(self, itemsize: int = 4):
+    def comm_per_relax(self, itemsize: int = 4, reverse: bool = False):
         """Analytic (elems, bytes, reduce-axis hops) of one cross-device
         label reduction on this graph — what the engines accumulate into
-        ``RunStats``.  (The opt-in deterministic-add path replicates flat
-        edge views instead of reducing; the model does not special-case
-        it.)"""
-        return self._reducer().comm_per_relax(self.n_pad, itemsize)
+        ``RunStats``.  ``reverse=True`` models a reversed edge scatter,
+        which executes through the reverse-safe reducer (cvc2d degrades to
+        full-mesh), so bc's backward sweeps are charged what they actually
+        cost.  (The opt-in deterministic-add path replicates flat edge
+        views instead of reducing; the model does not special-case it.)"""
+        red = self._reverse_safe_reducer() if reverse else self._reducer()
+        return red.comm_per_relax(self.n_pad, itemsize)
 
     def budget_edge_mass(self, mask: jax.Array) -> jax.Array:
         """Max *per-shard* frontier edge mass — what a per-shard merge-path
@@ -427,9 +440,29 @@ class ShardedGraph:
         per = jnp.sum(jnp.where(mask[None, :], self.shard_deg, 0), axis=1)
         return jnp.max(per)
 
+    def _reverse_safe_reducer(self) -> CrossReducer:
+        """Reducer for a *reversed* edge scatter (updates land on edge
+        sources).  The CVC 2-D structure relies on every update hitting a
+        vertex the device's grid column owns — reversed scatters hit the
+        row side instead, so cvc2d would silently drop cross-column
+        contributions; degrade that one mode to the full-mesh reduce.
+        owner1d is a full reduce-scatter over the whole vector (correct
+        for any production pattern) and is kept."""
+        red = self._reducer()
+        if red.mode == "cvc2d":
+            return CrossReducer(mode="full", axes=red.axes, rows=red.rows,
+                                cols=red.cols)
+        return red
+
     # ---- sharded operator implementations (operators.py dispatch) -----
     def sharded_push_dense(self, src_val, active, out_init, kind, use_weight,
-                           substrate):
+                           substrate, reverse=False):
+        if reverse:
+            return _edge_scatter(self.mesh, self.axes,
+                                 self._reverse_safe_reducer(), self.dst,
+                                 self.src, self.w, src_val, active, out_init,
+                                 kind, use_weight, substrate,
+                                 vertex_mask=True)
         return _edge_scatter(self.mesh, self.axes, self._reducer(), self.src,
                              self.dst, self.w, src_val, active, out_init,
                              kind, use_weight, substrate, vertex_mask=True)
@@ -443,11 +476,56 @@ class ShardedGraph:
                              active, out_init, kind, use_weight, substrate,
                              vertex_mask=True)
 
-    def sharded_det_push(self, src_val, active, out_init, use_weight):
+    def sharded_det_push(self, src_val, active, out_init, use_weight,
+                         reverse=False):
         """Deterministic ``add`` push: canonical-order fixed tree over the
-        flat out-edge views (see ``_det_add_flat``)."""
-        return _det_add_flat(self.src_idx, self.col_idx, self.edge_w,
+        flat out-edge views (see ``_det_add_flat``).  ``reverse`` swaps the
+        endpoint roles; the canonical re-sort keys on the *new* roles, so
+        the association order still matches the single-device reversed
+        deterministic path exactly."""
+        s, d = ((self.col_idx, self.src_idx) if reverse
+                else (self.src_idx, self.col_idx))
+        return _det_add_flat(s, d, self.edge_w,
                              src_val, out_init, use_weight, active=active)
+
+    def sharded_relax_edges(self, src_val, edge_mask, out_init, kind,
+                            use_weight, substrate):
+        """Full edge list under a per-edge validity mask: the (m_pad,)
+        mask is aligned with the flat shard views, so it reshards into
+        (D, epd) alongside the edges."""
+        mask2 = edge_mask.reshape(self.ndev, self.epd)
+        return _edge_scatter(self.mesh, self.axes, self._reducer(), self.src,
+                             self.dst, self.w, src_val, mask2, out_init,
+                             kind, use_weight, substrate, vertex_mask=False)
+
+    def sharded_det_relax_edges(self, src_val, edge_mask, out_init,
+                                use_weight):
+        return _det_add_flat(self.src_idx, self.col_idx, self.edge_w,
+                             src_val, out_init, use_weight, valid=edge_mask)
+
+    def sharded_intersect(self, adj, osrc, odst, substrate):
+        """Edge-chunk-sharded oriented intersection for triangle counting:
+        each device counts its (epd_t,) slice of the canonical oriented
+        edge list through the substrate's intersect kernel, then a single
+        ``psum`` of the exact int32 partials — the count is identical at
+        every (placement, ndev).  ``osrc``/``odst`` are (D, epd_t),
+        sentinel-padded."""
+        sent, axes = self.sentinel, self.axes
+
+        def local(a, s, d):
+            s, d = s[0], d[0]
+            if substrate == "pallas":
+                c = gk.intersect_count(a, s, d, sentinel=sent)
+            else:
+                c = gk.intersect_ref(a, s, d, sent)
+            return jax.lax.psum(jnp.asarray(c, jnp.int32), axes)
+
+        fn = _shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(), P(axes), P(axes)),
+            out_specs=P(), **{_SM_CHECK_KWARG: False},
+        )
+        return fn(adj, osrc, odst)
 
     def sharded_det_pull(self, src_val, active, out_init, use_weight):
         assert self.has_csc

@@ -1,8 +1,9 @@
 """Pallas edge-relaxation kernels — the graph engine's hot-path substrate.
 
-Three kernels cover every operator the engine lowers (push, pull, sparse
-advance + batch relax), all blocked to the graph's ``block_size`` granularity
-(the paper's huge-page analogue, P2 — per-block DMA, never per-element):
+Four kernels cover every operator the engine lowers (push, pull, sparse
+advance + batch relax, oriented intersection), all blocked to the graph's
+``block_size`` granularity (the paper's huge-page analogue, P2 — per-block
+DMA, never per-element):
 
 * ``_edge_relax_kernel`` — grid over **edge blocks**; each step loads one
   ``(1, block_e)`` tile of the COO/CSC edge arrays, gathers carried values,
@@ -17,6 +18,14 @@ advance + batch relax), all blocked to the graph's ``block_size`` granularity
   then binary-searches it so a 3M-degree hub and a degree-1 leaf cost the
   same per-slot work.  The fixed edge-slot budget assignment happens
   *inside* the kernel — host code only picks the ladder rung.
+
+* ``_intersect_kernel`` — triangle counting's sorted intersection: grid over
+  **oriented-edge blocks**; each step gathers the sorted oriented-adjacency
+  rows of both endpoints and counts merge hits by branchless binary search
+  (``ref.sorted_lower_bound`` — the identical compare/select code as the
+  jnp substrate, so the int32 counts are bitwise equal).  The scalar count
+  is revisited across the sequential grid, same race-free accumulation as
+  the edge-relax output.
 
 Reductions: min / max / add / or (or = scatter-max over uint8; the wrapper
 in ops.py widens bool accumulators).  All formulas mirror ref.py term for
@@ -38,7 +47,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from .ref import edge_message, neutral_for
+from .ref import edge_message, neutral_for, sorted_lower_bound
 
 
 def _reduce_into(cur, dst, msg, kind: str):
@@ -103,6 +112,51 @@ def edge_relax_pallas(src, dst, w, mask, src_val, out_init, *, kind: str,
     )(src_val, mask_in, out_init,
       src.reshape(nb, block_e), dst.reshape(nb, block_e),
       w.reshape(nb, block_e))
+
+
+def _intersect_kernel(adj_ref, s_ref, d_ref, out_ref, *, sentinel: int):
+    b = pl.program_id(0)
+
+    @pl.when(b == 0)
+    def _init():
+        out_ref[0] = jnp.int32(0)
+
+    adj = adj_ref[...]
+    s = s_ref[0]
+    d = d_ref[0]
+    nu = adj[s]                         # (block_e, dmax) candidates
+    nv = adj[d]                         # (block_e, dmax) sorted targets
+    pos = sorted_lower_bound(nv, nu)    # same code as ref.intersect_ref
+    dmax = adj.shape[-1]
+    hit = jnp.take_along_axis(nv, jnp.clip(pos, 0, dmax - 1), axis=-1) == nu
+    hit &= nu != sentinel
+    # scalar output revisited across the sequential grid: race-free += like
+    # the edge-relax accumulator
+    out_ref[0] = out_ref[0] + jnp.sum(hit.astype(jnp.int32))
+
+
+def intersect_pallas(adj, src, dst, *, sentinel: int, block_e: int,
+                     interpret: bool):
+    """Blocked oriented-intersection count (tc's hot loop): grid over edge
+    blocks of ``block_e`` oriented edges; each step gathers the two sorted
+    adjacency rows per edge and counts sorted-merge hits by binary search.
+    ``src.shape[0]`` must be a multiple of ``block_e``; returns int32."""
+    e = src.shape[0]
+    assert e % block_e == 0, (e, block_e)
+    nb = e // block_e
+
+    full = lambda shape: pl.BlockSpec(shape, lambda b: (0,) * len(shape))
+    edge = pl.BlockSpec((1, block_e), lambda b: (b, 0))
+
+    out = pl.pallas_call(
+        functools.partial(_intersect_kernel, sentinel=sentinel),
+        grid=(nb,),
+        in_specs=[full(adj.shape), edge, edge],
+        out_specs=full((1,)),
+        out_shape=jax.ShapeDtypeStruct((1,), jnp.int32),
+        interpret=interpret,
+    )(adj, src.reshape(nb, block_e), dst.reshape(nb, block_e))
+    return out[0]
 
 
 def _advance_kernel(fidx_ref, fcount_ref, deg_ref, rowptr_ref, col_ref,

@@ -12,7 +12,7 @@ import math
 import jax
 import jax.numpy as jnp
 
-from .graph_ops import advance_pallas, edge_relax_pallas
+from .graph_ops import advance_pallas, edge_relax_pallas, intersect_pallas
 
 # block tile target for edge/budget arrays; actual block is the largest
 # divisor ≤ target so padded sizes from any graph block_size tile exactly
@@ -94,3 +94,23 @@ def advance_frontier(f_idx, f_count, out_deg, row_ptr, col_idx, edge_w, *,
         block_b = _pick_block(budget)
     return _advance_jit(f_idx, f_count, out_deg, row_ptr, col_idx, edge_w,
                         budget, sentinel, m_pad, block_b, interpret)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sentinel", "block_e", "interpret"),
+)
+def _intersect_jit(adj, src, dst, sentinel, block_e, interpret):
+    return intersect_pallas(adj, src, dst, sentinel=sentinel,
+                            block_e=block_e, interpret=interpret)
+
+
+def intersect_count(adj, src, dst, *, sentinel: int,
+                    block_e: int | None = None,
+                    interpret: bool | None = None):
+    """Blocked oriented-intersection count for a batch of oriented edges
+    (see graph_ops.py); returns an exact int32 scalar."""
+    if interpret is None:
+        interpret = not _attempt_lowering()
+    if block_e is None:
+        block_e = _pick_block(src.shape[0])
+    return _intersect_jit(adj, src, dst, sentinel, block_e, interpret)

@@ -154,6 +154,43 @@ def pull_ref(nbr, dst, w, src_val, active, out_init, kind: str = "min",
     raise ValueError(kind)
 
 
+def sorted_lower_bound(rows, vals):
+    """Branchless per-row lower bound: for each query ``vals[..., j]`` the
+    index of the first element of ``rows[..., :]`` that is >= it (``rows``
+    sorted ascending along the last axis).  Pure compare/select — the same
+    code runs inside the Pallas intersect kernel, so both substrates
+    produce identical (integer) positions."""
+    dmax = rows.shape[-1]
+    lo = jnp.zeros(vals.shape, jnp.int32)
+    hi = jnp.full(vals.shape, dmax, jnp.int32)
+    for _ in range(max(int(dmax).bit_length(), 1)):
+        mid = (lo + hi) >> 1
+        probe = jnp.take_along_axis(rows, jnp.clip(mid, 0, dmax - 1), axis=-1)
+        less = probe < vals
+        lo = jnp.where(less, mid + 1, lo)
+        hi = jnp.where(less, hi, mid)
+    return lo
+
+
+def intersect_ref(adj, src, dst, sentinel: int):
+    """Oriented triangle intersection count over an edge batch.
+
+    ``adj``: (n_pad, dmax) sorted oriented adjacency, sentinel-padded rows.
+    ``src``/``dst``: (e,) endpoints of oriented edges (sentinel on padding
+    slots — ``adj[sentinel]`` is all-sentinel, so padded edges contribute
+    0).  Returns the int32 total of |N+(src_i) ∩ N+(dst_i)| — exact, so
+    results are bitwise identical across substrates, edge-chunk sizes and
+    shard partitions.
+    """
+    nu = adj[src]                       # (e, dmax) candidates w in N+(u)
+    nv = adj[dst]                       # (e, dmax) sorted search targets
+    pos = sorted_lower_bound(nv, nu)
+    dmax = adj.shape[-1]
+    hit = jnp.take_along_axis(nv, jnp.clip(pos, 0, dmax - 1), axis=-1) == nu
+    hit &= nu != sentinel
+    return jnp.sum(hit.astype(jnp.int32))
+
+
 def advance_ref(f_idx, f_count, out_deg, row_ptr, col_idx, edge_w,
                 budget: int, sentinel: int, m_pad: int):
     """Merge-path expansion of a compacted frontier into ``budget`` edge

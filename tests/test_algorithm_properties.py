@@ -1,0 +1,178 @@
+"""Property-based tests (hypothesis) for the three algorithms newly routed
+through the substrate seam: k-core structure (nesting, idempotence), bc
+(non-negativity, leaf zeros, path closed form), and tc (relabeling and
+edge-chunk invariance, exactness against the numpy oracle)."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import from_coo
+from repro.core import operators as ops
+from repro.core.algorithms import bc, kcore, tc
+from repro.graphs import generators as gen
+
+import oracles
+
+
+def _sym_graph(n, edges):
+    src = np.array([e[0] for e in edges], np.int64) % n
+    dst = np.array([e[1] for e in edges], np.int64) % n
+    return from_coo(src, dst, n, block_size=16, symmetrize=True)
+
+
+sym_graph_strategy = st.builds(
+    lambda n, edges: (_sym_graph(n, edges), n),
+    n=st.integers(4, 48),
+    edges=st.lists(st.tuples(st.integers(0, 47), st.integers(0, 47)),
+                   min_size=1, max_size=150),
+)
+
+
+# ---------------------------------------------------------------------------
+# k-core
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(gn=sym_graph_strategy, k=st.integers(2, 5))
+def test_kcore_nesting_and_variant_agreement(gn, k):
+    """k-core ⊆ (k−1)-core for any graph and k, and the sparse-ladder peel
+    is bitwise identical to the fused dense peel."""
+    g, n = gn
+    alive_k, _ = kcore.kcore_peel(g, k)
+    alive_km1, _ = kcore.kcore_peel(g, k - 1)
+    ak = np.asarray(alive_k)
+    assert not np.any(ak & ~np.asarray(alive_km1))
+    alive_dd, _ = kcore.kcore_dd_sparse(g, k)
+    assert np.array_equal(ak, np.asarray(alive_dd))
+
+
+@settings(max_examples=25, deadline=None)
+@given(gn=sym_graph_strategy, k=st.integers(2, 4))
+def test_kcore_peel_idempotent(gn, k):
+    """Peeling is a closure: re-peeling the induced k-core subgraph removes
+    nothing (every survivor keeps >= k alive neighbours)."""
+    g, n = gn
+    alive, _ = kcore.kcore_peel(g, k)
+    a = np.asarray(alive)
+    src = np.asarray(g.src_idx)[: g.m]
+    dst = np.asarray(g.col_idx)[: g.m]
+    keep = a[src] & a[dst]
+    if not keep.any():
+        # no surviving edges → no survivor can have degree >= k >= 2
+        assert not a[:n].any()
+        return
+    g2 = from_coo(src[keep], dst[keep], n, block_size=16)
+    alive2, _ = kcore.kcore_peel(g2, k)
+    assert np.array_equal(a[:n], np.asarray(alive2)[:n])
+    # direct degree check: every survivor has >= k alive neighbours
+    deg_alive = np.bincount(src[keep], minlength=n)
+    assert np.all(deg_alive[a[:n]] >= k)
+
+
+# ---------------------------------------------------------------------------
+# bc
+# ---------------------------------------------------------------------------
+
+def _directed_graph(n, edges):
+    src = np.array([e[0] for e in edges], np.int64) % n
+    dst = np.array([e[1] for e in edges], np.int64) % n
+    return from_coo(src, dst, n, block_size=16)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n=st.integers(4, 48),
+       edges=st.lists(st.tuples(st.integers(0, 47), st.integers(0, 47)),
+                      min_size=1, max_size=150),
+       src_seed=st.integers(0, 2**31 - 1))
+def test_bc_nonnegative_and_zero_on_sinks(n, edges, src_seed):
+    """Dependencies are sums of non-negative terms: bc >= 0 everywhere,
+    exactly 0 at the source and at sinks (no out-edges -> no dependencies
+    flow back through them)."""
+    g = _directed_graph(n, edges)
+    source = int(np.random.default_rng(src_seed).integers(0, n))
+    score, stats = bc.bc_brandes(g, source)
+    s = np.asarray(score)[:n]
+    assert np.all(s >= 0.0)
+    assert s[source] == 0.0
+    sinks = np.asarray(g.out_deg)[:n] == 0
+    assert np.all(s[sinks] == 0.0)
+    assert stats.rounds > 0 and stats.edges_touched > 0
+
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+@pytest.mark.parametrize("n", [2, 9, 33])
+def test_bc_path_closed_form(substrate, n):
+    """Directed path 0->1->...->n-1 from source 0: every interior vertex u
+    lies on the single shortest path to each of its n-1-u descendants, so
+    bc[u] = n-1-u (and bc[0] = 0 by convention).  Integer-valued sums —
+    exact on both substrates."""
+    src, dst, nn = gen.path(n)
+    g = from_coo(src, dst, nn, block_size=16)
+    with ops.substrate_scope(substrate):
+        score, _ = bc.bc_brandes(g, 0)
+    expect = np.maximum(nn - 1.0 - np.arange(nn), 0.0)
+    expect[0] = 0.0
+    np.testing.assert_array_equal(np.asarray(score)[:nn], expect)
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(4, 32),
+       edges=st.lists(st.tuples(st.integers(0, 31), st.integers(0, 31)),
+                      min_size=1, max_size=100),
+       src_seed=st.integers(0, 2**31 - 1))
+def test_bc_matches_oracle(n, edges, src_seed):
+    """Seam-routed Brandes equals the numpy oracle on arbitrary digraphs."""
+    g = _directed_graph(n, edges)
+    src = np.asarray(g.src_idx)[: g.m]
+    dst = np.asarray(g.col_idx)[: g.m]
+    source = int(np.random.default_rng(src_seed).integers(0, n))
+    ref = oracles.brandes_bc(src, dst, n, source)
+    score, _ = bc.bc_brandes(g, source)
+    np.testing.assert_allclose(np.asarray(score)[:n], ref,
+                               rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# tc
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(gn=sym_graph_strategy, perm_seed=st.integers(0, 2**31 - 1))
+def test_tc_invariant_under_relabeling(gn, perm_seed):
+    """Triangle count is a graph invariant: any vertex relabeling (which
+    changes the degree-order orientation's tiebreaks) must not change it,
+    and both must equal the numpy oracle."""
+    g, n = gn
+    src = np.asarray(g.src_idx)[: g.m].astype(np.int64)
+    dst = np.asarray(g.col_idx)[: g.m].astype(np.int64)
+    ref = oracles.triangle_count(src, dst, n)
+    count, _ = tc.tc_count(g, edge_chunk=64)
+    assert count == ref
+    perm = np.random.default_rng(perm_seed).permutation(n)
+    gp = from_coo(perm[src], perm[dst], n, block_size=16)
+    count_p, _ = tc.tc_count(gp, edge_chunk=64)
+    assert count_p == ref
+
+
+@settings(max_examples=15, deadline=None)
+@given(gn=sym_graph_strategy,
+       chunks=st.lists(st.sampled_from([16, 48, 128, 1024]), min_size=2,
+                       max_size=3, unique=True))
+def test_tc_invariant_under_edge_chunk(gn, chunks):
+    """The chunked intersection is exact int32 arithmetic — the count must
+    not depend on how the oriented edge list is chunked, on either
+    substrate."""
+    g, n = gn
+    counts = set()
+    for chunk in chunks:
+        for sub in ("jnp", "pallas"):
+            with ops.substrate_scope(sub):
+                c, stats = tc.tc_count(g, edge_chunk=chunk)
+            counts.add(int(c))
+            assert stats.substrate == sub
+    assert len(counts) == 1

@@ -142,11 +142,14 @@ def test_pagerank_pull_directed_oracle(gname):
 
 @pytest.mark.parametrize("gname", ["rmat_small", "erdos", "grid"])
 @pytest.mark.parametrize("k", [2, 3, 5])
-def test_kcore(gname, k):
+@pytest.mark.parametrize("variant", ["peel", "dd_sparse"])
+def test_kcore(gname, k, variant):
     g, s, d, _, n = build(gname, symmetrize=True)
     ref = oracles.kcore_alive(s, d, n, k)
-    alive, _ = kcore.kcore_peel(g, k)
+    alive, stats = kcore.VARIANTS[variant](g, k)
     assert np.array_equal(np.asarray(alive)[:n], ref)
+    # work counter never exceeds the dense rounds x m cost
+    assert stats.edges_touched <= stats.rounds * g.m
 
 
 @pytest.mark.parametrize("gname", ["rmat_small", "web_like", "grid", "path"])

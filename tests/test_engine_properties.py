@@ -142,6 +142,74 @@ def test_bfs_variants_agree(gn, src_seed):
         np.testing.assert_allclose(o, base, err_msg=name)
 
 
+# ---------------------------------------------------------------------------
+# RunStats work accounting: edges_touched pinned against per-round oracles
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(gn=graph_strategy, k=st.integers(2, 5))
+def test_kcore_edges_touched_is_removed_degree_mass(gn, k):
+    """kcore_peel's edges_touched charges the removed-vertex degree mass —
+    the per-round frontier out-degree sums, not rounds × m.  Each vertex is
+    removed in exactly one round, so the oracle total is the static degree
+    sum over everything the peel eventually removed."""
+    from repro.core.algorithms import kcore
+
+    g, n = gn
+    # symmetrize the way kcore expects
+    src = np.asarray(g.src_idx)[: g.m]
+    dst = np.asarray(g.col_idx)[: g.m]
+    gs = from_coo(src, dst, n, block_size=16, symmetrize=True)
+    alive, stats = kcore.kcore_peel(gs, k)
+    a = np.asarray(alive)
+    removed = ~a & np.asarray(gs.valid_vertex_mask())
+    expect = int(np.asarray(gs.out_deg)[removed].sum())
+    assert stats.edges_touched == expect
+    assert stats.edges_touched <= stats.rounds * gs.m
+
+
+def test_kcore_sparse_tail_cheaper_than_dense_accounting():
+    """On a path (the long-sparse-tail case) the ladder engine's work
+    counter must stay near the tiny per-round frontier mass instead of
+    paying m per round — the paper's work-efficiency claim for peeling."""
+    from repro.core.algorithms import kcore
+    from repro.graphs import generators as gen
+
+    src, dst, n = gen.path(64)
+    g = from_coo(src, dst, n, block_size=16, symmetrize=True)
+    alive, stats = kcore.kcore_dd_sparse(g, 2)
+    assert not bool(np.asarray(alive)[:n].any())  # paths have no 2-core
+    assert stats.sparse_rounds > 0
+    assert stats.edges_touched < stats.rounds * g.m
+    # agreement with the dense peel, whose counter is the exact mass
+    alive_d, stats_d = kcore.kcore_peel(g, 2)
+    assert np.array_equal(np.asarray(alive), np.asarray(alive_d))
+    assert stats_d.edges_touched == int(np.asarray(g.out_deg).sum())
+
+
+@settings(max_examples=15, deadline=None)
+@given(gn=graph_strategy, src_seed=st.integers(0, 2**31 - 1))
+def test_bc_edges_touched_counts_fwd_and_bwd_sweeps(gn, src_seed):
+    """bc's counter must reflect both sweeps: the forward level loop runs
+    ecc+1 rounds of two full-edge relaxes (discovery min + sigma add), the
+    backward loop ecc+1 rounds of one reversed relax — 3·(ecc+1)·m total,
+    where ecc is the max finite BFS level from the source (oracle BFS)."""
+    import oracles
+    from repro.core.algorithms import bc
+
+    g, n = gn  # bc is hop-count: the generator's random weights are ignored
+    src = np.asarray(g.src_idx)[: g.m]
+    dst = np.asarray(g.col_idx)[: g.m]
+    source = int(np.random.default_rng(src_seed).integers(0, n))
+    dist = oracles.bfs(src, dst, n, source)
+    ecc = int(dist[np.isfinite(dist)].max())
+    _, stats = bc.bc_brandes(g, source)
+    fwd = ecc + 1  # the last forward round discovers nothing and stops
+    assert stats.rounds == 2 * fwd
+    assert stats.edges_touched == 3 * fwd * g.m
+    assert stats.dense_rounds == 2 * fwd
+
+
 @settings(max_examples=15, deadline=None)
 @given(gn=graph_strategy, src_seed=st.integers(0, 2**31 - 1))
 def test_sparse_engine_backend_invariant(gn, src_seed):

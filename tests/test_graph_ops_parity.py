@@ -70,17 +70,29 @@ def assert_bitwise(a, b, what=""):
     np.testing.assert_array_equal(a, b, err_msg=what)
 
 
+@pytest.mark.parametrize("reverse", [False, True])
 @pytest.mark.parametrize("kind", KINDS)
 @pytest.mark.parametrize("gname", list(GRAPHS))
-def test_push_parity(gname, kind):
+def test_push_parity(gname, kind, reverse):
+    """Forward and reversed (bc's backward sweep) pushes: the reversed
+    variant swaps gather/scatter roles but runs the same kernels."""
     g = build(gname)
     sv, active, init = vertex_data(g, kind)
     use_w = kind != "or"
     a = ops.push_dense(g, sv, active, init, kind=kind, use_weight=use_w,
-                       substrate="jnp")
+                       substrate="jnp", reverse=reverse)
     b = ops.push_dense(g, sv, active, init, kind=kind, use_weight=use_w,
-                       substrate="pallas")
-    assert_bitwise(a, b, f"push/{gname}/{kind}")
+                       substrate="pallas", reverse=reverse)
+    assert_bitwise(a, b, f"push/{gname}/{kind}/rev={reverse}")
+    if reverse and kind == "min":
+        # reversed push == forward push over the explicitly reversed graph
+        src = np.asarray(g.src_idx)[: g.m]
+        dst = np.asarray(g.col_idx)[: g.m]
+        w = np.asarray(g.edge_w)[: g.m]
+        gr = from_coo(dst, src, g.n, w, block_size=g.block_size, dedup=False)
+        c = ops.push_dense(gr, sv, active, init, kind=kind,
+                           use_weight=use_w, substrate="jnp")
+        assert_bitwise(a, c, f"push-rev-vs-transpose/{gname}")
 
 
 @pytest.mark.parametrize("kind", KINDS)
@@ -94,6 +106,39 @@ def test_pull_parity(gname, kind):
     b = ops.pull_dense(g, sv, active, init, kind=kind, use_weight=use_w,
                        substrate="pallas")
     assert_bitwise(a, b, f"pull/{gname}/{kind}")
+
+
+@pytest.mark.parametrize("gname", list(GRAPHS))
+def test_intersect_parity(gname):
+    """tc's oriented-intersection op: both substrates share the binary
+    search, so the per-chunk int32 counts must be bitwise equal — including
+    on all-padding chunks."""
+    from repro.core.algorithms import tc
+
+    src, dst, n = GRAPHS[gname]()
+    gs = from_coo(src, dst, n, block_size=64, symmetrize=True)
+    adj, osrc, odst = tc.oriented_adjacency(gs)
+    chunk = 64
+    ne = int(osrc.shape[0])
+    ne_pad = max((ne + chunk - 1) // chunk, 1) * chunk
+    osrc = jnp.pad(osrc, (0, ne_pad - ne), constant_values=gs.sentinel)
+    odst = jnp.pad(odst, (0, ne_pad - ne), constant_values=gs.sentinel)
+    total_j = total_p = 0
+    for c in range(0, ne_pad, chunk):
+        a = ops.intersect_batch(adj, osrc[c:c + chunk], odst[c:c + chunk],
+                                sentinel=gs.sentinel, substrate="jnp")
+        b = ops.intersect_batch(adj, osrc[c:c + chunk], odst[c:c + chunk],
+                                sentinel=gs.sentinel, substrate="pallas")
+        assert int(a) == int(b), f"intersect/{gname}/chunk{c}"
+        total_j += int(a)
+        total_p += int(b)
+    # padding-only chunk contributes exactly zero
+    pad_s = jnp.full((chunk,), gs.sentinel, jnp.int32)
+    z = ops.intersect_batch(adj, pad_s, pad_s, sentinel=gs.sentinel,
+                            substrate="pallas")
+    assert int(z) == 0
+    count, _ = tc.tc_count(gs, edge_chunk=chunk)
+    assert total_j == total_p == count
 
 
 @pytest.mark.parametrize("frontier", ["some", "empty", "overflow"])

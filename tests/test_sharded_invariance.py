@@ -1,13 +1,24 @@
 """Cross-backend invariance suite for the sharded execution path.
 
 The paper's engine claims (sparse worklists, merge-path budgets) must
-survive scale-out unchanged: for every (substrate ∈ {jnp, pallas}) ×
-(placement ∈ {local, interleaved, blocked}) × (ndev ∈ {1, 2, 4, 8}) ×
-(reducer ∈ {cvc, full}) cell, BFS/CC/SSSP labels from the sharded
-``SparseLadderEngine`` must be **bitwise identical** to the single-device
-jnp reference (min-reductions are order-independent, so any shard
-partition, kernel interleaving, or cross-device reduction structure must
-agree exactly), with sparse worklist rounds genuinely exercised on shards.
+survive scale-out unchanged — for the **full seven-benchmark suite**.  For
+every (substrate ∈ {jnp, pallas}) × (placement ∈ {local, interleaved,
+blocked}) × (ndev ∈ {1, 2, 4, 8}) × (reducer ∈ {cvc, full}) cell:
+
+* BFS/CC/SSSP labels from the sharded ``SparseLadderEngine`` must be
+  **bitwise identical** to the single-device jnp reference (min-reductions
+  are order-independent, so any shard partition, kernel interleaving, or
+  cross-device reduction structure must agree exactly), with sparse
+  worklist rounds genuinely exercised on shards;
+* **kcore** alive masks are bitwise identical (int32 decrements reduce
+  exactly) through the same sparse ladder, with a long-sparse-tail cell
+  (path peel) and a hub-skew cell driving per-shard escalation;
+* **bc** betweenness and **pagerank** ranks run under
+  ``operators.set_deterministic_add(True)`` and must be bitwise identical
+  (the canonical fixed-order float tree is partition-independent);
+* **tc** counts are exact int32 — equal across every cell *and* equal to
+  the numpy ``oracles.triangle_count``.
+
 The communication-avoiding reducer (column reduce + row gather on 2-D
 grids, owner-targeted reduce-scatter on 1-D cuts) is pinned against the
 full-mesh baseline both for bitwise equality and for actually *reducing*
@@ -41,8 +52,9 @@ SCRIPT = textwrap.dedent(
 
     from repro.core import from_coo, shard_graph
     from repro.core import operators as ops
-    from repro.core.algorithms import bfs, cc, sssp
+    from repro.core.algorithms import bc, bfs, cc, kcore, pagerank, sssp, tc
     from repro.graphs import generators as gen
+    import oracles
 
     SUBSTRATES = ("jnp", "pallas")
     PLACEMENTS = ("local", "interleaved", "blocked")
@@ -58,15 +70,31 @@ SCRIPT = textwrap.dedent(
         return g, gs
 
     def run_all(g, gs, source):
+        # bfs/sssp/cc: min-reductions, bitwise in any order.  bc + pagerank:
+        # float adds — run under the deterministic fixed-order tree.  kcore:
+        # exact int decrements.  tc: exact int32 intersection counts.
         db, stb = bfs.bfs_dd_sparse(g, source)
         ds, sts = sssp.sssp_dd_sparse(g, source)
         lc, stc = cc.cc_dd_sparse(gs)
-        return (np.asarray(db), np.asarray(ds), np.asarray(lc)), (stb, sts, stc)
+        with ops.deterministic_add_scope(True):
+            vb, stv = bc.bc_brandes(g, source)
+            pr, stp = pagerank.pr_push(g)
+        ka, stk = kcore.kcore_dd_sparse(gs, 2)
+        nt, stt = tc.tc_count(gs, edge_chunk=256)
+        return (np.asarray(db), np.asarray(ds), np.asarray(lc),
+                np.asarray(vb), np.asarray(pr), np.asarray(ka),
+                np.asarray(nt)), (stb, sts, stc, stv, stp, stk, stt)
+
+    NAMES = ("bfs", "sssp", "cc", "bc", "pagerank", "kcore", "tc")
 
     def check_cells(g, gs, source, substrates, placements, ndevs,
                     reducers=("cvc",)):
         with ops.substrate_scope("jnp"):
             ref, _ = run_all(g, gs, source)
+        # tc: exact against the numpy oracle, not just self-consistent
+        ss = np.asarray(gs.src_idx)[: gs.m]
+        dd = np.asarray(gs.col_idx)[: gs.m]
+        assert int(ref[6]) == oracles.triangle_count(ss, dd, gs.n)
         for sub in substrates:
             for ndev in ndevs:
                 mesh = Mesh(devs[:ndev], ("data",))
@@ -79,7 +107,7 @@ SCRIPT = textwrap.dedent(
                         with ops.substrate_scope(sub):
                             got, stats = run_all(sg, sgs, source)
                         cell = (sub, ndev, pol, red)
-                        for name, r, o in zip(("bfs", "sssp", "cc"), ref, got):
+                        for name, r, o in zip(NAMES, ref, got):
                             assert r.dtype == o.dtype, (name,) + cell
                             assert np.array_equal(r, o), (name,) + cell
                         for st in stats:
@@ -141,6 +169,73 @@ SCRIPT = textwrap.dedent(
             (grid, by_red["cvc"].comm_elems, by_red["full"].comm_elems)
         assert by_red["cvc"].reduce_axis_hops < by_red["full"].reduce_axis_hops
 
+    # bc's backward sweep pushes along *reversed* edges, which breaks the
+    # 2-D cut's column-ownership invariant — the reducer must degrade that
+    # scatter to full-mesh, never silently drop contributions (bitwise
+    # under det-add against the single-device reference), and the comm
+    # model must charge the backward relaxes at the degraded (full-mesh)
+    # rate, not the configured cvc rate
+    with ops.deterministic_add_scope(True):
+        mesh22 = Mesh(devs[:4].reshape(2, 2), ("data", "model"))
+        by_red = {}
+        for red in REDUCERS:
+            sg22 = shard_graph(g, mesh22, ("data", "model"), scheme="cvc",
+                               grid=(2, 2), reducer=red)
+            b22, st22 = bc.bc_brandes(sg22, source)
+            assert np.array_equal(np.asarray(b22), ref[3]), ("bc-2d", red)
+            by_red[red] = st22
+        # exact model: 2·fwd forward relaxes at the configured rate plus
+        # fwd (== bwd) reversed relaxes at the reverse-safe rate
+        fwd_b = by_red["cvc"].rounds // 2
+        sg_cvc = shard_graph(g, mesh22, ("data", "model"), scheme="cvc",
+                             grid=(2, 2), reducer="cvc")
+        e_fwd = sg_cvc.comm_per_relax()[0]
+        e_rev = sg_cvc.comm_per_relax(reverse=True)[0]
+        assert e_rev > e_fwd  # reversed scatters degrade cvc2d to full-mesh
+        assert by_red["cvc"].comm_elems == 2 * fwd_b * e_fwd + fwd_b * e_rev
+        assert by_red["cvc"].comm_elems < by_red["full"].comm_elems
+
+    # widened-bool reductions honor the caller's kind in every reducer
+    # mode: a bool kind="min" push is an AND across shards — cvc2d must
+    # not silently substitute max (OR) for the widened accumulator
+    rng_b = np.random.default_rng(7)
+    sv_b = jnp.asarray(rng_b.random(g.n_pad) < 0.5)
+    act_b = jnp.asarray(rng_b.random(g.n_pad) < 0.7)
+    act_b = act_b.at[g.sentinel].set(False)
+    init_b = jnp.ones((g.n_pad,), bool)
+    with ops.substrate_scope("jnp"):
+        want_b = np.asarray(ops.push_dense(g, sv_b, act_b, init_b,
+                                           kind="min", use_weight=False))
+        cells_b = [(Mesh(devs[:4].reshape(2, 2), ("data", "model")),
+                    ("data", "model"), "cvc", (2, 2)),
+                   (Mesh(devs, ("data",)), ("data",), "oec", None)]
+        for mesh_b, axes_b, scheme_b, grid_b in cells_b:
+            for red in REDUCERS:
+                sgb = shard_graph(g, mesh_b, axes_b, scheme=scheme_b,
+                                  grid=grid_b, reducer=red)
+                got_b = np.asarray(ops.push_dense(
+                    sgb, sv_b, act_b, init_b, kind="min", use_weight=False))
+                assert np.array_equal(want_b, got_b), (scheme_b, red)
+
+    # ---- kcore long sparse tail: path peel, rounds O(n), frontier O(1) --
+    # the paper's canonical sparse-tail case: k=2 on a path removes the two
+    # endpoints each round; the ladder must hold every round at the lowest
+    # sparse rung, and sharded peels must be bitwise identical
+    psrc, pdst, pn = gen.path(48)
+    gp = from_coo(psrc, pdst, pn, block_size=16, symmetrize=True)
+    with ops.substrate_scope("jnp"):
+        alive_p, st_p = kcore.kcore_dd_sparse(gp, 2)
+    assert not bool(np.asarray(alive_p)[:pn].any())  # a path has no 2-core
+    assert st_p.sparse_rounds > 0
+    assert st_p.edges_touched < st_p.rounds * gp.m  # never paid dense cost
+    for ndev in (2, 8):
+        sgp = shard_graph(gp, Mesh(devs[:ndev], ("data",)), ("data",),
+                          policy="blocked")
+        with ops.substrate_scope("jnp"):
+            alive_ps, st_ps = kcore.kcore_dd_sparse(sgp, 2)
+        assert np.array_equal(np.asarray(alive_p), np.asarray(alive_ps)), ndev
+        assert st_ps.sparse_rounds > 0, ndev
+
     # ---- per-shard ladder: escalating shards never change labels --------
     # skewed hub graph: one shard's frontier mass dwarfs the median's, so
     # sparse rounds run with some shards escalated to their local dense
@@ -157,6 +252,18 @@ SCRIPT = textwrap.dedent(
         got_h, st_h = bfs.bfs_dd_sparse(sgh, 0)
     assert np.array_equal(np.asarray(ref_h), np.asarray(got_h))
     print("SHARD_ESCALATIONS", st_h.shard_escalations)
+
+    # hub-skew kcore: the symmetrized hub graph peels through the sparse
+    # ladder with the hub's shard carrying most of the frontier mass —
+    # shards may escalate locally, alive masks must stay bitwise identical
+    ghs = from_coo(hub_src, hub_dst, 65, block_size=16, symmetrize=True)
+    with ops.substrate_scope("jnp"):
+        alive_h, _ = kcore.kcore_dd_sparse(ghs, 3)
+        sghs = shard_graph(ghs, Mesh(devs, ("data",)), ("data",),
+                          policy="blocked")
+        alive_hs, st_hs = kcore.kcore_dd_sparse(sghs, 3)
+    assert np.array_equal(np.asarray(alive_h), np.asarray(alive_hs))
+    print("KCORE_SHARD_ESCALATIONS", st_hs.shard_escalations)
 
     # ---- hypothesis layer: random graphs through a reduced matrix -------
     try:
@@ -178,8 +285,26 @@ SCRIPT = textwrap.dedent(
             gg = from_coo(src, dst, n, w, block_size=16, build_csc=True)
             ggs = from_coo(src, dst, n, block_size=16, symmetrize=True)
             s = int(r.integers(0, n))
-            check_cells(gg, ggs, s, ("jnp",), ("interleaved", "blocked"),
-                        (1, 8), ("cvc",))
+            # min-label algorithms across cells...
+            with ops.substrate_scope("jnp"):
+                dref, _ = bfs.bfs_dd_sparse(gg, s)
+                kref, _ = kcore.kcore_dd_sparse(ggs, 2)
+                tref, _ = tc.tc_count(ggs, edge_chunk=64)
+            ssym = np.asarray(ggs.src_idx)[: ggs.m]
+            dsym = np.asarray(ggs.col_idx)[: ggs.m]
+            assert tref == oracles.triangle_count(ssym, dsym, ggs.n)
+            for pol in ("interleaved", "blocked"):
+                for ndev in (1, 8):
+                    mesh = Mesh(devs[:ndev], ("data",))
+                    sgg = shard_graph(gg, mesh, ("data",), policy=pol)
+                    sggs = shard_graph(ggs, mesh, ("data",), policy=pol)
+                    with ops.substrate_scope("jnp"):
+                        dgot, _ = bfs.bfs_dd_sparse(sgg, s)
+                        kgot, _ = kcore.kcore_dd_sparse(sggs, 2)
+                        tgot, _ = tc.tc_count(sggs, edge_chunk=64)
+                    assert np.array_equal(np.asarray(dref), np.asarray(dgot))
+                    assert np.array_equal(np.asarray(kref), np.asarray(kgot))
+                    assert tgot == tref, (pol, ndev)
         prop()
         print("HYPOTHESIS_OK")
     print("SHARDED_INVARIANCE_OK")
@@ -229,10 +354,44 @@ def test_sharded_single_device_inprocess(substrate, policy):
     assert st.comm_elems == 0 and st.reduce_axis_hops == 0
 
 
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_sharded_single_device_new_algorithms(substrate):
+    """bc (det add) / kcore / tc on a 1-device ShardedGraph, in-process:
+    the sharded dispatch path itself, without forced devices."""
+    from jax.sharding import Mesh
+
+    from repro.core import from_coo, shard_graph
+    from repro.core import operators as ops
+    from repro.core.algorithms import bc, kcore, tc
+    from repro.graphs import generators as gen
+
+    src, dst, n = gen.web_crawl_like(6, 3, 5, 2, seed=3)
+    g = from_coo(src, dst, n, block_size=16)
+    gs = from_coo(src, dst, n, block_size=16, symmetrize=True)
+    with ops.substrate_scope("jnp"):
+        with ops.deterministic_add_scope(True):
+            b_ref, _ = bc.bc_brandes(g, 0)
+        k_ref, _ = kcore.kcore_dd_sparse(gs, 2)
+        t_ref, _ = tc.tc_count(gs, edge_chunk=64)
+    mesh = Mesh(np.array(jax.devices()[:1]), ("data",))
+    sg = shard_graph(g, mesh, ("data",), policy="blocked")
+    sgs = shard_graph(gs, mesh, ("data",), policy="blocked")
+    with ops.substrate_scope(substrate):
+        with ops.deterministic_add_scope(True):
+            b_sh, stb = bc.bc_brandes(sg, 0)
+        k_sh, stk = kcore.kcore_dd_sparse(sgs, 2)
+        t_sh, stt = tc.tc_count(sgs, edge_chunk=64)
+    np.testing.assert_array_equal(np.asarray(b_ref), np.asarray(b_sh))
+    np.testing.assert_array_equal(np.asarray(k_ref), np.asarray(k_sh))
+    assert t_sh == t_ref
+    for st in (stb, stk, stt):
+        assert st.ndev == 1 and st.substrate == substrate
+
+
 def test_sharded_graph_flat_views_cover_all_edges():
     """The flattened shard views feed non-operator algorithms (pointer-jump
-    CC, delta-stepping): they must contain exactly the original edge
-    multiset plus sentinel padding."""
+    CC, delta-stepping) and tc's oriented-adjacency builder: they must
+    contain exactly the original edge multiset plus sentinel padding."""
     from jax.sharding import Mesh
 
     from repro.core import from_coo, shard_graph
