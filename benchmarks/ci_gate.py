@@ -1,0 +1,146 @@
+"""CI wall-clock gate + cross-run trend for ``BENCH_scaling.json``.
+
+The reproduction's headline claim (paper Fig. 6/7 → Fig. 10) is that the
+work-efficient sparse-ladder engine beats the BSP baseline — in wall-clock,
+not just ``edges_touched``.  Device-resident rung execution (engine.py) is
+what makes that true; this module makes CI *enforce* that it stays true:
+
+* ``gate``  — fail the job when ``fig10/engine_bfs_dev{D}`` wall-clock
+  exceeds ``--max-ratio`` × ``fig10/bsp_bfs_dev{D}`` at any gated device
+  count, printing the per-ndev ratio table (markdown, appended to
+  ``$GITHUB_STEP_SUMMARY`` when present).  Timing rows carry repeated
+  samples (``benchmarks/common.py``); the gate compares ``wall_us_min``
+  — the least-interfered sample on a shared runner — and falls back to
+  the median ``us_per_call``.
+* ``trend`` — diff the current file against the previous successful main
+  run's artifact: per-row wall-clock and ``comm_elems`` deltas land in
+  the job summary, so the perf trajectory is visible per PR instead of
+  buried in artifact zips.
+
+Both subcommands are plain-stdlib (no jax import): they run in seconds on
+the bench job after the sweep.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _load(path: str) -> dict:
+    with open(path) as fh:
+        doc = json.load(fh)
+    return {r["name"]: r for r in doc.get("rows", [])}
+
+
+def _wall_us(row: dict) -> float:
+    """Preferred wall-clock of a row: the min of its repeated samples
+    (robust to shared-runner interference), else the median the ROW line
+    carried."""
+    stats = row.get("stats") or {}
+    return float(stats.get("wall_us_min", row["us_per_call"]))
+
+
+def _summary(lines) -> None:
+    text = "\n".join(lines) + "\n"
+    print(text)
+    path = os.environ.get("GITHUB_STEP_SUMMARY")
+    if path:
+        with open(path, "a") as fh:
+            fh.write(text)
+
+
+def cmd_gate(args) -> int:
+    rows = _load(args.bench)
+    ndevs = [int(x) for x in args.ndev.split(",") if x]
+    lines = [
+        f"## engine vs BSP wall-clock gate (max ratio {args.max_ratio:g}×)",
+        "",
+        "| ndev | engine µs | bsp µs | ratio | gate |",
+        "|-----:|----------:|-------:|------:|:-----|",
+    ]
+    failures = []
+    for d in ndevs:
+        ename, bname = f"fig10/engine_bfs_dev{d}", f"fig10/bsp_bfs_dev{d}"
+        if ename not in rows or bname not in rows:
+            failures.append(f"missing row {ename} or {bname}")
+            lines.append(f"| {d} | — | — | — | MISSING |")
+            continue
+        e, b = _wall_us(rows[ename]), _wall_us(rows[bname])
+        ratio = e / b if b > 0 else float("inf")
+        ok = ratio <= args.max_ratio
+        lines.append(f"| {d} | {e:,.0f} | {b:,.0f} | {ratio:.2f}× |"
+                     f" {'ok' if ok else '**FAIL**'} |")
+        if not ok:
+            failures.append(
+                f"ndev={d}: engine {e:,.0f}µs > {args.max_ratio:g}× "
+                f"bsp {b:,.0f}µs (ratio {ratio:.2f})")
+    # the pre-fusion dispatch baseline, when the sweep recorded it: shows
+    # what the device-resident rungs bought (informational, ungated)
+    pr = rows.get("fig10/engine_perround_bfs_dev1")
+    if pr is not None and "fig10/engine_bfs_dev1" in rows:
+        fused = _wall_us(rows["fig10/engine_bfs_dev1"])
+        per = _wall_us(pr)
+        lines += ["", f"per-round dispatch at dev1: {per:,.0f}µs → fused "
+                      f"{fused:,.0f}µs ({per / max(fused, 1e-9):.1f}× faster)"]
+    _summary(lines)
+    if failures:
+        print("GATE FAILED:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    return 0
+
+
+def cmd_trend(args) -> int:
+    cur = _load(args.bench)
+    try:
+        prev = _load(args.prev)
+    except OSError as e:
+        _summary([f"## bench trend", "",
+                  f"no previous artifact to diff against ({e})"])
+        return 0
+    lines = [
+        f"## bench trend vs previous main run",
+        "",
+        "| row | wall µs (prev → cur) | Δ wall | comm_elems (prev → cur) |",
+        "|:----|:---------------------|-------:|:------------------------|",
+    ]
+    for name, row in cur.items():
+        p = prev.get(name)
+        if p is None:
+            lines.append(f"| {name} | new row | — | — |")
+            continue
+        w0, w1 = _wall_us(p), _wall_us(row)
+        dw = (w1 - w0) / w0 * 100 if w0 > 0 else float("inf")
+        c0 = (p.get("stats") or {}).get("comm_elems")
+        c1 = (row.get("stats") or {}).get("comm_elems")
+        comm = f"{c0} → {c1}" if c0 is not None and c1 is not None else "—"
+        lines.append(f"| {name} | {w0:,.0f} → {w1:,.0f} | {dw:+.0f}% |"
+                     f" {comm} |")
+    for name in prev:
+        if name not in cur:
+            lines.append(f"| {name} | row removed | — | — |")
+    _summary(lines)
+    return 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    g = sub.add_parser("gate", help="fail when engine/bsp ratio exceeds bar")
+    g.add_argument("bench", help="BENCH_scaling.json from this run")
+    g.add_argument("--max-ratio", type=float, default=3.0)
+    g.add_argument("--ndev", default="1,2,4",
+                   help="comma-separated gated device counts")
+    g.set_defaults(fn=cmd_gate)
+    tr = sub.add_parser("trend", help="diff against a previous run's json")
+    tr.add_argument("bench", help="BENCH_scaling.json from this run")
+    tr.add_argument("prev", help="BENCH_scaling.json from the previous run")
+    tr.set_defaults(fn=cmd_trend)
+    args = ap.parse_args()
+    raise SystemExit(args.fn(args))
+
+
+if __name__ == "__main__":
+    main()

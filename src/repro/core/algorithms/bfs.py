@@ -80,11 +80,15 @@ def _dense_step(g, dist, mask):
     return new, ops.updated_mask(dist, new)
 
 
-def bfs_dd_sparse(g: Graph, src: int, max_rounds: int = 100_000):
-    """Data-driven over the sparse-worklist ladder (the paper's Galois class)."""
+def bfs_dd_sparse(g: Graph, src: int, max_rounds: int = 100_000,
+                  fused: bool = True):
+    """Data-driven over the sparse-worklist ladder (the paper's Galois
+    class).  ``fused`` selects device-resident rung stretches (default) vs
+    one host dispatch per round — identical labels and RunStats either
+    way."""
     dist0 = _init_dist(g, src)
     mask0 = fr.dense_from_indices(jnp.array([src]), g.n_pad).mask
-    eng = SparseLadderEngine(g, _sparse_step, _dense_step)
+    eng = SparseLadderEngine(g, _sparse_step, _dense_step, fused=fused)
     dist, _ = eng.run(dist0, mask0, max_rounds)
     return dist, eng.stats
 

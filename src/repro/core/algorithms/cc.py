@@ -126,13 +126,14 @@ def _cc_dense_step(g, lab, mask):
     return new, ops.updated_mask(lab, new)
 
 
-def cc_dd_sparse(g: Graph, max_rounds: int = 100_000):
+def cc_dd_sparse(g: Graph, max_rounds: int = 100_000, fused: bool = True):
     """Min-label flooding over the sparse-worklist ladder.  Starts dense
     (every vertex is active) and drops to sparse budgets as the flood
-    converges component by component."""
+    converges component by component.  ``fused`` selects device-resident
+    rung stretches (default) vs one host dispatch per round."""
     lab0 = _init_labels(g)
     mask0 = g.valid_vertex_mask()
-    eng = SparseLadderEngine(g, _cc_sparse_step, _cc_dense_step)
+    eng = SparseLadderEngine(g, _cc_sparse_step, _cc_dense_step, fused=fused)
     lab, _ = eng.run(lab0, mask0, max_rounds)
     return lab, eng.stats
 

@@ -24,6 +24,8 @@ Graphs must be symmetrized; degree = out-degree of the symmetric graph.
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -63,6 +65,11 @@ def kcore_peel(g: Graph, k: int, max_rounds: int = 100_000):
         edges_touched=int(work), dense_rounds=int(rounds))
 
 
+# the step factories are memoised so the closure for a given k has stable
+# identity: the fused engine jits rung stretches with the step as a static
+# argument, and a fresh closure per engine run would defeat the process-
+# wide trace-cache reuse (and force a retrace per kcore_dd_sparse call)
+@functools.lru_cache(maxsize=None)
 def _kcore_sparse_step(k: int):
     def step(g, state, mask, *, capacity: int, budget: int):
         alive, deg = state
@@ -79,6 +86,7 @@ def _kcore_sparse_step(k: int):
     return step
 
 
+@functools.lru_cache(maxsize=None)
 def _kcore_dense_step(k: int):
     def step(g, state, mask):
         alive, deg = state
@@ -93,17 +101,19 @@ def _kcore_dense_step(k: int):
     return step
 
 
-def kcore_dd_sparse(g: Graph, k: int, max_rounds: int = 100_000):
+def kcore_dd_sparse(g: Graph, k: int, max_rounds: int = 100_000,
+                    fused: bool = True):
     """Peel over the sparse-worklist ladder: the frontier is this round's
     removal set (the paper's long-sparse-tail workload).  Dense fallback
     rounds charge the frontier's degree mass (``dense_cost="mass"``), the
-    same work convention as ``kcore_peel``."""
+    same work convention as ``kcore_peel``.  ``fused`` selects device-
+    resident rung stretches (default) vs one host dispatch per round."""
     valid = g.valid_vertex_mask()
     deg0 = g.out_deg.astype(jnp.int32)
     alive0 = valid
     mask0 = alive0 & (deg0 < k)
     eng = SparseLadderEngine(g, _kcore_sparse_step(k), _kcore_dense_step(k),
-                             dense_cost="mass")
+                             dense_cost="mass", fused=fused)
     (alive, _), _ = eng.run((alive0, deg0), mask0, max_rounds)
     return alive, eng.stats
 

@@ -74,11 +74,15 @@ def _sssp_dense_step(g, dist, mask):
     return new, ops.updated_mask(dist, new)
 
 
-def sssp_dd_sparse(g: Graph, src: int, max_rounds: int = 100_000):
-    """Chaotic-relaxation over the sparse ladder (no priority order)."""
+def sssp_dd_sparse(g: Graph, src: int, max_rounds: int = 100_000,
+                   fused: bool = True):
+    """Chaotic-relaxation over the sparse ladder (no priority order).
+    ``fused`` selects device-resident rung stretches (default) vs one host
+    dispatch per round."""
     dist0 = _init_dist(g, src)
     mask0 = fr.dense_from_indices(jnp.array([src]), g.n_pad).mask
-    eng = SparseLadderEngine(g, _sssp_sparse_step, _sssp_dense_step)
+    eng = SparseLadderEngine(g, _sssp_sparse_step, _sssp_dense_step,
+                             fused=fused)
     dist, _ = eng.run(dist0, mask0, max_rounds)
     return dist, eng.stats
 

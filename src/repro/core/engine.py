@@ -6,24 +6,45 @@ Two execution regimes, mirroring the paper's §5 classification:
   dense-frontier rounds.  One compile, no host round-trips.  This is the
   bulk-synchronous vertex-program regime every framework supports.
 
-* ``SparseLadderEngine`` — data-driven rounds over sparse worklists.  Each
-  round the host reads the frontier size (a scalar sync — the analogue of
-  Galois's worklist bookkeeping) and dispatches a step compiled for the
-  smallest (capacity, budget) rung that fits.  Recompilation count is bounded
-  by the ladder size, the "few big pages" amortisation of P2.  When the
-  frontier's edge mass exceeds the largest sparse budget, the engine falls
-  back to the dense step for that round (direction-optimizing style).
+* ``SparseLadderEngine`` — data-driven rounds over sparse worklists along
+  a (capacity, budget) rung ladder, executed **device-resident**: each
+  rung's step is compiled into one jitted ``lax.while_loop`` that runs
+  *consecutive same-rung rounds* entirely on device.  The carry holds the
+  labels pytree, the frontier mask, the next round's ladder scalars
+  (recomputed in-loop by ``frontier.round_scalars``) and int32 round /
+  escalation / mass counters; the loop exits only when the frontier
+  terminates or its size / edge mass leaves the rung's band (outgrows
+  capacity or budget, shrinks enough that a smaller rung pays, or crosses
+  the dense cutoff — ``frontier.sparse_band`` / ``dense_band`` re-derive
+  the host dispatcher's decision on device).  Host syncs therefore scale
+  with rung *switches* — O(ladder depth), roughly diameter-independent —
+  instead of O(rounds): exactly one blocking ``jax.device_get`` per
+  stretch, which fetches the previous stretch's counters and the next
+  rung's scalars in a single transfer.  This is the per-round sync
+  amortisation the paper's P1/P2 principles demand of a runtime (the
+  blocking scalar fetch is the DIMM-latency analogue), and it is what
+  lets the work-efficient engine also win wall-clock against the fused
+  BSP baseline.  Dense fallback rounds fuse into band-exit stretches the
+  same way.  ``SparseLadderEngine(..., fused=False)`` keeps the one-
+  round-per-dispatch path — one scalar sync per round — as the measurable
+  baseline, and the fused engine's ``RunStats`` counters are pinned equal
+  to it (``tests/test_engine_properties.py``).
 
-  On a sharded graph the ladder is **per shard**: the capacity rung is
-  sized by the largest *local* frontier (active vertices with local
-  edges), the budget rung by the *median* per-shard edge mass, and a
-  hub-heavy shard whose mass outgrows the rung escalates alone to its
-  shard-local dense relax inside the step (``RunStats.shard_escalations``)
-  instead of forcing a global dense round.  All round scalars (frontier
-  size, per-shard counts and masses) are computed on-device by one jitted
-  helper and fetched in a single transfer, so the host overlaps rung
-  selection with the still-executing relax + cross-device reduce (JAX
-  async dispatch) instead of issuing multiple blocking reductions.
+  Rung selection is unchanged by fusion.  When the frontier's median edge
+  mass exceeds the largest sparse budget, the engine falls back to the
+  dense step (direction-optimizing style).  On a sharded graph the ladder
+  is **per shard**: the capacity rung is sized by the largest *local*
+  frontier (active vertices with local edges), the budget rung by the
+  *median* per-shard edge mass, and a hub-heavy shard whose mass outgrows
+  the rung escalates alone to its shard-local dense relax inside the step
+  (``RunStats.shard_escalations``) instead of forcing a global dense
+  round; the escalation ``psum`` stays in the while_loop carry as a
+  device int32, never fetched per round.  Fused stretches are jitted at
+  module level with the step function and the (substrate, deterministic-
+  add) mode as static arguments, so the compiled rung executables are
+  shared across engine instances on the same graph — recompilation count
+  is bounded by the ladder size (the "few big pages" amortisation of P2),
+  and repeat runs pay zero retrace.
 
 Both engines report work counters so benchmarks can reproduce the paper's
 work-efficiency argument (Fig. 6/7): ``edges_touched`` is the number of edge
@@ -38,6 +59,7 @@ unsharded runs).
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Callable, Tuple
 
 import jax
@@ -129,8 +151,94 @@ def run_dense(
     return rounds, out
 
 
+# ---------------------------------------------------------------------------
+# Device-resident rung stretches
+# ---------------------------------------------------------------------------
+# One jitted band-exit while_loop per (rung, regime).  Jitted at module
+# level with the step callable and the (substrate, deterministic-add) mode
+# as *static* arguments: the trace cache keys on them, so a mode flip gets
+# a fresh trace by construction (no per-engine cache invalidation needed —
+# contrast the per-round path's ``_pinned_jit``) and engine instances on
+# the same graph share compiled rung executables across runs.
+#
+# Both runners are do-while loops: the ``first`` carry flag guarantees the
+# round the host dispatched for always executes, even when its scalars sit
+# outside the band (the overflow backstop enters dense below the cutoff);
+# every later round runs only while the band predicate re-derives the same
+# host decision.  ``limit`` caps the stretch at the caller's remaining
+# ``max_rounds`` budget.  All counters stay device int32s; nothing in
+# either loop body touches the host.
+
+
+@partial(jax.jit, static_argnames=("step", "capacity", "budget", "lo_cap",
+                                   "lo_budget", "cutoff", "sub", "det"))
+def _sparse_stretch(g, labels, mask, scalars, limit, *, step, capacity,
+                    budget, lo_cap, lo_budget, cutoff, sub, det):
+    """Run consecutive (capacity, budget)-rung sparse rounds on device.
+
+    Returns ``(labels, mask, scalars, rounds, escalations)`` — ``scalars``
+    already describes the *next* round, so the host's single fetch per
+    stretch covers both settling this stretch and picking the next rung.
+    """
+    with ops.substrate_scope(sub), ops.deterministic_add_scope(det):
+        def cond(c):
+            first, _, _, sc, k, _ = c
+            band = fr.sparse_band(sc, capacity, lo_cap, budget, lo_budget,
+                                  cutoff)
+            return (k < limit) & (first | band)
+
+        def body(c):
+            _, labels, mask, _, k, esc = c
+            labels, mask, e = step(g, labels, mask, capacity=capacity,
+                                   budget=budget)
+            return (jnp.bool_(False), labels, mask,
+                    fr.round_scalars(g, mask), k + 1,
+                    esc + jnp.asarray(e, jnp.int32))
+
+        _, labels, mask, scalars, k, esc = jax.lax.while_loop(
+            cond, body,
+            (jnp.bool_(True), labels, mask, scalars, jnp.int32(0),
+             jnp.int32(0)))
+        return labels, mask, scalars, k, esc
+
+
+@partial(jax.jit, static_argnames=("step", "cutoff", "sub", "det"))
+def _dense_stretch(g, labels, mask, scalars, limit, *, step, cutoff, sub,
+                   det):
+    """Run consecutive dense-fallback rounds on device.
+
+    ``mass`` accumulates each round's *entry* frontier edge mass (the work
+    the relax actually expands) so ``dense_cost="mass"`` accounting matches
+    the per-round engine exactly.  Returns ``(labels, mask, scalars,
+    rounds, mass)``.
+    """
+    with ops.substrate_scope(sub), ops.deterministic_add_scope(det):
+        def cond(c):
+            first, _, _, sc, k, _ = c
+            return (k < limit) & (first | fr.dense_band(sc, cutoff))
+
+        def body(c):
+            _, labels, mask, sc, k, mass = c
+            mass = mass + sc[3]
+            labels, mask = step(g, labels, mask)
+            return (jnp.bool_(False), labels, mask,
+                    fr.round_scalars(g, mask), k + 1, mass)
+
+        _, labels, mask, scalars, k, mass = jax.lax.while_loop(
+            cond, body,
+            (jnp.bool_(True), labels, mask, scalars, jnp.int32(0),
+             jnp.int32(0)))
+        return labels, mask, scalars, k, mass
+
+
+# initial ladder scalars (later stretches return next-round scalars in
+# their carry, so this runs once per engine run, not once per round)
+_round_scalars = jax.jit(fr.round_scalars)
+
+
 class SparseLadderEngine:
-    """Dispatches per-round jitted steps along a (capacity, budget) ladder."""
+    """Dispatches device-resident rung stretches along a (capacity, budget)
+    ladder (``fused=False`` keeps one jitted step dispatch per round)."""
 
     def __init__(
         self,
@@ -140,6 +248,7 @@ class SparseLadderEngine:
         ladder_base: int = 4,
         budget_factor: int = 4,
         dense_cost: str = "m",
+        fused: bool = True,
     ):
         # ``labels`` may be any pytree (kcore threads an (alive, degree)
         # pair); only ``mask`` must be an (n_pad,) bool frontier bitmap.
@@ -148,8 +257,18 @@ class SparseLadderEngine:
         # touches all of them) or ``"mass"`` (the frontier's out-degree
         # mass — the paper's work-efficiency convention for peel-style
         # algorithms whose dense rounds are still frontier-driven).
+        # ``fused`` selects device-resident rung stretches (the default;
+        # host syncs = O(rung switches)) vs one dispatch + scalar sync per
+        # round (the measurable baseline; both produce identical labels
+        # AND identical RunStats counters).  The step callables should
+        # have stable identity (module-level functions or cached
+        # closures): fused stretches are jitted with the step as a static
+        # argument, so fresh closures per engine defeat trace-cache reuse
+        # across runs.
         assert dense_cost in ("m", "mass"), dense_cost
         self.dense_cost = dense_cost
+        self.fused = fused
+        self._stretch_keys = set()
         self.g = g
         self.cap_ladder = fr.ladder_capacities(g.n_pad, g.block_size, ladder_base)
         # budgets are per merge-path expansion: per-device on a sharded
@@ -161,7 +280,6 @@ class SparseLadderEngine:
         self.budget_factor = budget_factor
         self._sparse = {}
         self._dense = None
-        self._scalars = None
         self._sparse_fn = sparse_step
         self._dense_fn = dense_step
         self.stats = RunStats.from_graph(g)
@@ -202,34 +320,107 @@ class SparseLadderEngine:
             self._dense = self._pinned_jit(self._dense_fn)
         return self._dense
 
-    def _get_scalars(self):
-        """One jitted device-side reduction of every scalar the ladder
-        needs for the next round — (frontier size, max per-shard local
-        frontier, median per-shard edge mass, total frontier edge mass) —
-        fetched in a single transfer.  The relax/reduce of the round that
-        produced ``mask`` keeps executing underneath the fetch (async
-        dispatch), so rung selection overlaps the cross-device reduce."""
-        if self._scalars is None:
-            shard_deg = getattr(self.g, "shard_deg", None)
-            if shard_deg is not None and getattr(self.g, "ndev", 1) > 1:
-                def scal(g, mask):
-                    count = jnp.sum(mask.astype(jnp.int32))
-                    local = mask[None, :] & (g.shard_deg > 0)
-                    counts = jnp.sum(local.astype(jnp.int32), axis=1)
-                    masses = jnp.sum(
-                        jnp.where(mask[None, :], g.shard_deg, 0), axis=1)
-                    srt = jnp.sort(masses)
-                    return (count, jnp.max(counts), srt[srt.shape[0] // 2],
-                            jnp.sum(masses))
-            else:
-                def scal(g, mask):
-                    count = jnp.sum(mask.astype(jnp.int32))
-                    mass = g.budget_edge_mass(mask)
-                    return count, count, mass, mass
-            self._scalars = jax.jit(scal)
-        return self._scalars
 
     def run(self, labels, mask, max_rounds: int = 10_000):
+        if self.fused:
+            return self._run_fused(labels, mask, max_rounds)
+        return self._run_per_round(labels, mask, max_rounds)
+
+    # ---- device-resident rung execution (the default) -----------------
+
+    def _note_stretch(self, key):
+        """``compiles`` counts distinct stretch traces *this engine*
+        requested (≤ ladder² × regimes, the P2 amortisation bound); the
+        process-wide jit cache may satisfy them without recompiling."""
+        if key not in self._stretch_keys:
+            self._stretch_keys.add(key)
+            self.stats.compiles += 1
+
+    def _settle_stretch(self, regime, budget, k, esc, dmass):
+        """Fold one fetched stretch (k rounds) into RunStats — the exact
+        per-round accumulation, summed in closed form."""
+        g = self.g
+        self.stats.rounds += k
+        if regime == "dense":
+            self.stats.dense_rounds += k
+            self.stats.edges_touched += (
+                dmass if self.dense_cost == "mass" else k * g.m)
+            self.stats.add_comm(g, relaxes=k)
+        else:
+            ndev = self.stats.ndev
+            epd = getattr(g, "epd", g.m_pad)
+            self.stats.sparse_rounds += k
+            self.stats.shard_escalations += esc
+            # per round: budget·(ndev − esc_r) + epd·esc_r, summed over k
+            self.stats.edges_touched += budget * (k * ndev - esc) + epd * esc
+            self.stats.add_comm(g, relaxes=k, scalar_collectives=k)
+
+    def _run_fused(self, labels, mask, max_rounds: int):
+        g = self.g
+        sub = ops.get_substrate()
+        det = ops.get_deterministic_add()
+        self.stats.substrate = sub
+        sparse_cutoff = self.budget_ladder[-1] // 2
+        scalars = _round_scalars(g, mask)
+        pending = None  # (regime, budget) of the stretch in flight
+        counters = None
+        rounds_left = max_rounds
+        while True:
+            # ONE blocking fetch per stretch: the in-flight stretch's
+            # counters and the next round's ladder scalars come back in a
+            # single transfer (the stretch keeps executing under async
+            # dispatch until this point)
+            if pending is None:
+                count, cap_need, mass_med, _ = (
+                    int(x) for x in jax.device_get(scalars))
+            else:
+                sc, cnt = jax.device_get((scalars, counters))
+                count, cap_need, mass_med, _ = (int(x) for x in sc)
+                k, esc, dmass = (int(x) for x in cnt)
+                self._settle_stretch(pending[0], pending[1], k, esc, dmass)
+                rounds_left -= k
+                pending = None
+            if count == 0 or rounds_left <= 0:
+                break
+            cap = fr.pick_capacity(max(cap_need, 1), self.cap_ladder)
+            budget = fr.pick_capacity(max(mass_med, 1), self.budget_ladder)
+            # unreachable when pick_capacity honours the ladder contract
+            # (rung ≥ requested); kept as the overflow backstop — the
+            # do-while stretch then runs exactly one dense round
+            overflow = budget < mass_med or cap < cap_need
+            if overflow and mass_med <= sparse_cutoff:
+                self.stats.overflow_escalations += 1
+            limit = jnp.int32(rounds_left)
+            if mass_med > sparse_cutoff or overflow:
+                # the stretch's device-side mass accumulator is an int32
+                # and each round adds ≤ m: cap the stretch so the sum
+                # cannot wrap (per-round dispatch sums the same values in
+                # unbounded Python ints — the counters must stay equal).
+                # Only enormous graphs ever shorten a stretch: m = 1e6
+                # caps at 2147 dense rounds per fetch
+                mass_cap = max(1, (2**31 - 1) // max(g.m, 1))
+                limit = jnp.int32(min(rounds_left, mass_cap))
+                self._note_stretch(("dense", sub, det))
+                labels, mask, scalars, k_dev, mass_dev = _dense_stretch(
+                    g, labels, mask, scalars, limit, step=self._dense_fn,
+                    cutoff=sparse_cutoff, sub=sub, det=det)
+                pending = ("dense", 0)
+                counters = (k_dev, jnp.int32(0), mass_dev)
+            else:
+                self._note_stretch(("sparse", cap, budget, sub, det))
+                labels, mask, scalars, k_dev, esc_dev = _sparse_stretch(
+                    g, labels, mask, scalars, limit, step=self._sparse_fn,
+                    capacity=cap, budget=budget,
+                    lo_cap=fr.ladder_below(cap, self.cap_ladder),
+                    lo_budget=fr.ladder_below(budget, self.budget_ladder),
+                    cutoff=sparse_cutoff, sub=sub, det=det)
+                pending = ("sparse", budget)
+                counters = (k_dev, esc_dev, jnp.int32(0))
+        return labels, mask
+
+    # ---- per-round dispatch (the measurable baseline) ------------------
+
+    def _run_per_round(self, labels, mask, max_rounds: int):
         g = self.g
         # cached steps were pinned to the (substrate, deterministic-add)
         # mode active when they were jitted; if the engine-wide selection
@@ -247,7 +438,7 @@ class SparseLadderEngine:
         sparse_cutoff = self.budget_ladder[-1] // 2
         for _ in range(max_rounds):
             count, cap_need, mass_med, mass_tot = (
-                int(x) for x in jax.device_get(self._get_scalars()(g, mask)))
+                int(x) for x in jax.device_get(_round_scalars(g, mask)))
             if count == 0:
                 break
             self.stats.rounds += 1

@@ -124,3 +124,79 @@ def pick_capacity(count: int, ladder: Tuple[int, ...]) -> int:
         if count <= c:
             return c
     return ladder[-1]
+
+
+def ladder_below(rung: int, ladder: Tuple[int, ...]) -> int:
+    """The next-smaller rung (0 below the smallest): the lower edge of
+    ``rung``'s band.  ``pick_capacity`` returns ``rung`` exactly for
+    requests in ``(ladder_below(rung), rung]``."""
+    i = ladder.index(rung)
+    return ladder[i - 1] if i else 0
+
+
+# ---------------------------------------------------------------------------
+# Device-resident rung execution (engine.py fused stretches)
+# ---------------------------------------------------------------------------
+# ``round_scalars`` recomputes every scalar the ladder keys on *inside* the
+# fused ``lax.while_loop`` body, and the band predicates re-derive — on
+# device — exactly the decision the host-side dispatcher would make for
+# those scalars.  A rung's compiled loop keeps executing while the
+# predicate holds (the frontier stays in the rung's band) and exits the
+# moment the host would have picked a different rung or regime, so host
+# syncs scale with rung *switches*, not rounds.
+
+
+def round_scalars(g, mask: jax.Array):
+    """Device-side ladder scalars for one round, in one fused computation:
+    ``(count, cap_need, mass_med, mass_tot)`` —
+
+    * ``count``    global frontier size (the termination check);
+    * ``cap_need`` what the capacity rung must hold: the largest *local*
+      frontier on a sharded graph (vertices with local edges), the global
+      count otherwise;
+    * ``mass_med`` what the budget rung is sized by: the *median*
+      per-shard frontier edge mass on a mesh (light shards stop paying
+      for the heaviest one), the whole frontier mass otherwise;
+    * ``mass_tot`` total frontier edge mass (dense-round work accounting).
+
+    Pure device computation — safe inside ``jit`` and ``lax.while_loop``
+    bodies; callers fetch the tuple in a single transfer when they need
+    it on the host."""
+    shard_deg = getattr(g, "shard_deg", None)
+    count = jnp.sum(mask.astype(jnp.int32))
+    if shard_deg is not None and getattr(g, "ndev", 1) > 1:
+        local = mask[None, :] & (shard_deg > 0)
+        counts = jnp.sum(local.astype(jnp.int32), axis=1)
+        masses = jnp.sum(jnp.where(mask[None, :], shard_deg, 0), axis=1)
+        srt = jnp.sort(masses)
+        return (count, jnp.max(counts), srt[srt.shape[0] // 2],
+                jnp.sum(masses))
+    mass = g.budget_edge_mass(mask)
+    return count, count, mass, mass
+
+
+def sparse_band(scalars, capacity: int, lo_cap: int, budget: int,
+                lo_budget: int, sparse_cutoff: int) -> jax.Array:
+    """True while the host dispatcher would keep picking exactly this
+    (capacity, budget) sparse rung for ``scalars``: the frontier is alive,
+    neither ladder dimension outgrew its rung (``pick_capacity`` would
+    move up), neither shrank past the rung's lower edge (a smaller rung
+    pays), and the median mass stays under the dense cutoff."""
+    count, cap_need, mass_med, _ = scalars
+    cn = jnp.maximum(cap_need, 1)
+    bm = jnp.maximum(mass_med, 1)
+    return ((count > 0)
+            & (cn <= capacity) & (cn > lo_cap)
+            & (bm <= budget) & (bm > lo_budget)
+            & (mass_med <= sparse_cutoff))
+
+
+def dense_band(scalars, sparse_cutoff: int) -> jax.Array:
+    """True while the host dispatcher would keep picking the dense
+    fallback: frontier alive and median mass above the sparse cutoff.
+    (The overflow backstop also dispatches dense, but a rung picked by
+    ``pick_capacity`` always covers its request, so overflow can never
+    arise *mid-stretch* — an overflow-entered stretch simply runs its one
+    guaranteed first round and exits here.)"""
+    count, _, mass_med, _ = scalars
+    return (count > 0) & (mass_med > sparse_cutoff)

@@ -368,6 +368,13 @@ def sparse_round(
     Returns ``(new_out, escalated_shards)`` — the escalation count is 0 on
     a single partition, and the number of shards that fell back to their
     local dense relax on a mesh (labels are bitwise identical either way).
+
+    The whole round — both dispatch targets included — is
+    ``lax.while_loop``-body safe: pure device computation, statically
+    shaped, no host fetch, with the escalation count returned as a device
+    int32 (never forced to a Python int here).  The fused engine relies on
+    this to run consecutive same-rung rounds device-resident, carrying the
+    escalation counter in the loop carry (``engine._sparse_stretch``).
     """
     sub = _resolve(substrate)
     fused = getattr(g, "sharded_sparse_round", None)

@@ -577,6 +577,12 @@ class ShardedGraph:
         heavy local relax and the cross-device label reduce; XLA is free to
         overlap the scalar collective (and the host's next rung pick) with
         them.  Returns ``(merged_labels, escalated_shard_count)``.
+
+        ``lax.while_loop``-body safe by construction: the ``shard_map``
+        (collectives included) nests under the fused engine's rung
+        while_loop, and the escalation ``psum`` result is a replicated
+        device int32 the loop accumulates in its carry — it is never
+        fetched to the host per round, only once per rung stretch.
         """
         epd, sent, axes = self.epd, self.sentinel, self.axes
         red = self._reducer()

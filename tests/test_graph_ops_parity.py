@@ -376,12 +376,14 @@ def test_e2e_pagerank_close_across_backends():
 
 
 def test_engine_reuse_retraces_on_substrate_flip(monkeypatch):
-    """A reused SparseLadderEngine must drop step caches traced under the
-    previous substrate — otherwise it executes one backend while reporting
-    the other.  Counting actual kernel invocations matters: JAX shares
-    trace caches across jit wrappers of the same function object, so a
-    naive re-jit of the module-level step would NOT retrace and the pallas
-    run would silently replay the jnp trace."""
+    """A reused per-round SparseLadderEngine must drop step caches traced
+    under the previous substrate — otherwise it executes one backend while
+    reporting the other.  Counting actual kernel invocations matters: JAX
+    shares trace caches across jit wrappers of the same function object, so
+    a naive re-jit of the module-level step would NOT retrace and the
+    pallas run would silently replay the jnp trace.  (The fused engine is
+    immune by construction — the substrate is a *static jit argument* of
+    its module-level stretch runners — see the test below.)"""
     from repro.core.engine import SparseLadderEngine
     from repro.core.algorithms.bfs import _dense_step, _init_dist, _sparse_step
     from repro.core import operators as ops_mod
@@ -396,7 +398,7 @@ def test_engine_reuse_retraces_on_substrate_flip(monkeypatch):
     monkeypatch.setattr(ops_mod.gk, "edge_relax", counting_relax)
 
     g = build("web_like")
-    eng = SparseLadderEngine(g, _sparse_step, _dense_step)
+    eng = SparseLadderEngine(g, _sparse_step, _dense_step, fused=False)
     mask0 = fr.dense_from_indices(jnp.array([0]), g.n_pad).mask
     with ops.substrate_scope("jnp"):
         d_j, _ = eng.run(_init_dist(g, 0), mask0)
@@ -409,6 +411,41 @@ def test_engine_reuse_retraces_on_substrate_flip(monkeypatch):
         assert eng.stats.compiles > compiles_first  # caches were dropped
     assert kernel_hits, "pallas run never reached the pallas kernels"
     assert_bitwise(d_j, d_p, "engine reuse across substrates")
+
+
+def test_fused_engine_substrate_is_static_trace_key(monkeypatch):
+    """The fused engine's stretch runners are jitted at module level with
+    the substrate as a static argument: a substrate flip on a reused
+    engine keys a *different* trace, so the pallas run must actually reach
+    the pallas kernels (at trace time) and report itself correctly.  The
+    graph uses shapes unique to this test so the first pallas stretch
+    cannot be satisfied by a trace cached from another test."""
+    from repro.core.engine import SparseLadderEngine
+    from repro.core.algorithms.bfs import _dense_step, _init_dist, _sparse_step
+    from repro.core import operators as ops_mod
+
+    kernel_hits = []
+    real_relax = ops_mod.gk.edge_relax
+
+    def counting_relax(*a, **k):
+        kernel_hits.append(1)
+        return real_relax(*a, **k)
+
+    monkeypatch.setattr(ops_mod.gk, "edge_relax", counting_relax)
+
+    src, dst, n = gen.web_crawl_like(7, 3, 5, 2, seed=23)
+    g = from_coo(src, dst, n, block_size=23)  # unique n_pad/m_pad
+    eng = SparseLadderEngine(g, _sparse_step, _dense_step)
+    mask0 = fr.dense_from_indices(jnp.array([0]), g.n_pad).mask
+    with ops.substrate_scope("jnp"):
+        d_j, _ = eng.run(_init_dist(g, 0), mask0)
+        assert eng.stats.substrate == "jnp"
+    assert not kernel_hits  # jnp stretches must not touch pallas kernels
+    with ops.substrate_scope("pallas"):
+        d_p, _ = eng.run(_init_dist(g, 0), mask0)
+        assert eng.stats.substrate == "pallas"
+    assert kernel_hits, "pallas stretch never reached the pallas kernels"
+    assert_bitwise(d_j, d_p, "fused engine reuse across substrates")
 
 
 def test_substrate_selection_api():

@@ -253,6 +253,21 @@ SCRIPT = textwrap.dedent(
     assert np.array_equal(np.asarray(ref_h), np.asarray(got_h))
     print("SHARD_ESCALATIONS", st_h.shard_escalations)
 
+    # ---- device-resident rung stretches vs per-round dispatch on shards:
+    # the fused while_loop keeps the per-shard escalation psum in its
+    # carry as a device int32 — on the escalating hub graph every counter
+    # (incl. shard_escalations and the comm model) must equal the
+    # per-round engine's, with bitwise-identical labels
+    with ops.substrate_scope("jnp"):
+        got_hp, st_hp = bfs.bfs_dd_sparse(sgh, 0, fused=False)
+    assert np.array_equal(np.asarray(got_h), np.asarray(got_hp))
+    for f in ("rounds", "edges_touched", "dense_rounds", "sparse_rounds",
+              "overflow_escalations", "shard_escalations", "comm_elems",
+              "comm_bytes", "reduce_axis_hops"):
+        assert getattr(st_h, f) == getattr(st_hp, f), \
+            (f, getattr(st_h, f), getattr(st_hp, f))
+    assert st_h.shard_escalations > 0  # the cell genuinely escalates
+
     # hub-skew kcore: the symmetrized hub graph peels through the sparse
     # ladder with the hub's shard carrying most of the frontier mass —
     # shards may escalate locally, alive masks must stay bitwise identical
