@@ -12,6 +12,12 @@ what makes that true; this module makes CI *enforce* that it stays true:
   samples (``benchmarks/common.py``); the gate compares ``wall_us_min``
   — the least-interfered sample on a shared runner — and falls back to
   the median ``us_per_call``.
+* ``ooc``   — gate the out-of-core streamed path (``BENCH_outofcore.json``):
+  for bfs and pagerank, streamed wall-clock **per edge touched** must stay
+  within ``--max-ratio`` (default 2×) of the all-resident pool's, the
+  labels must have come out bitwise equal, and ``h2d_bytes`` must match
+  the analytic ``shards_streamed × shard_bytes`` model exactly — the
+  acceptance contract of the tiered subsystem (core/tiered.py).
 * ``trend`` — diff the current file against the previous successful main
   run's artifact: per-row wall-clock and ``comm_elems`` deltas land in
   the job summary, so the perf trajectory is visible per PR instead of
@@ -92,6 +98,68 @@ def cmd_gate(args) -> int:
     return 0
 
 
+def cmd_ooc(args) -> int:
+    rows = _load(args.bench)
+    lines = [
+        f"## out-of-core streamed gate (max per-edge ratio "
+        f"{args.max_ratio:g}×)",
+        "",
+        "| algo | streamed µs/edge | resident µs/edge | ratio | h2d model |"
+        " bitwise | gate |",
+        "|:-----|-----------------:|-----------------:|------:|:----------|"
+        ":--------|:-----|",
+    ]
+    failures = []
+    for algo in ("bfs", "pr"):
+        sname = f"outofcore/{algo}_streamed"
+        rname = f"outofcore/{algo}_resident"
+        if sname not in rows or rname not in rows:
+            failures.append(f"missing row {sname} or {rname}")
+            lines.append(f"| {algo} | — | — | — | — | — | MISSING |")
+            continue
+        s, r = rows[sname], rows[rname]
+        sst = s.get("stats") or {}
+        rst = r.get("stats") or {}
+        problems = []
+        se, re_ = sst.get("edges_touched", 0), rst.get("edges_touched", 0)
+        if se <= 0 or re_ <= 0:
+            problems.append("edges_touched missing/zero")
+            ratio, spe, rpe = float("inf"), float("inf"), float("inf")
+        else:
+            spe, rpe = _wall_us(s) / se, _wall_us(r) / re_
+            ratio = spe / rpe if rpe > 0 else float("inf")
+            if ratio > args.max_ratio:
+                problems.append(
+                    f"streamed {spe:.4f}µs/edge > {args.max_ratio:g}× "
+                    f"resident {rpe:.4f}µs/edge (ratio {ratio:.2f})")
+        model_ok = (sst.get("h2d_bytes") ==
+                    sst.get("shards_streamed", 0) * sst.get("shard_bytes", 0))
+        if not model_ok:
+            problems.append(
+                f"h2d_bytes {sst.get('h2d_bytes')} != shards_streamed "
+                f"{sst.get('shards_streamed')} × shard_bytes "
+                f"{sst.get('shard_bytes')}")
+        bitwise = bool(sst.get("bitwise_equal", 0))
+        if not bitwise:
+            problems.append("streamed labels not bitwise equal to resident")
+        # the acceptance setting: the streamed CSR must not fit the pool
+        if sst.get("budget_ratio", 0) < 4:
+            problems.append(
+                f"csr/budget ratio {sst.get('budget_ratio')} < 4 — the "
+                "streamed row isn't actually out-of-core")
+        lines.append(
+            f"| {algo} | {spe:.4f} | {rpe:.4f} | {ratio:.2f}× |"
+            f" {'ok' if model_ok else '**FAIL**'} |"
+            f" {'ok' if bitwise else '**FAIL**'} |"
+            f" {'ok' if not problems else '**FAIL**'} |")
+        failures += [f"{algo}: {p}" for p in problems]
+    _summary(lines)
+    if failures:
+        print("OOC GATE FAILED:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    return 0
+
+
 def cmd_trend(args) -> int:
     cur = _load(args.bench)
     try:
@@ -134,6 +202,12 @@ def main() -> None:
     g.add_argument("--ndev", default="1,2,4",
                    help="comma-separated gated device counts")
     g.set_defaults(fn=cmd_gate)
+    oc = sub.add_parser(
+        "ooc", help="gate the out-of-core streamed path's per-edge "
+                    "wall-clock, bitwise equality and h2d model")
+    oc.add_argument("bench", help="BENCH_outofcore.json from this run")
+    oc.add_argument("--max-ratio", type=float, default=2.0)
+    oc.set_defaults(fn=cmd_ooc)
     tr = sub.add_parser("trend", help="diff against a previous run's json")
     tr.add_argument("bench", help="BENCH_scaling.json from this run")
     tr.add_argument("prev", help="BENCH_scaling.json from the previous run")

@@ -37,12 +37,31 @@ def run():
                     f"ratio={TIERS['vmem'][0]/TIERS['hbm'][0]:.1f}"))
     rows.append(row("table2/local_over_remote_bw", 0.0,
                     f"ratio={TIERS['hbm'][0]/TIERS['ici'][0]:.1f}"))
-    # measured host write bandwidth (container proxy for the Fig. 3 sweep)
+    # measured host write bandwidth (container proxy for the Fig. 3 sweep).
+    # Cold = first touch of a fresh np.empty allocation, where page faults
+    # dominate (the paper's device-DAX vs fsdax distinction in miniature);
+    # warm = rewrite of the faulted-in buffer, the steady-state bandwidth.
+    # The old single row timed only the cold pass and labelled the value
+    # "gbps" while computing GB/s — an 8x unit error; report GB/s honestly.
     for mb in (64, 256):
         buf = np.empty(mb * 2**20, dtype=np.uint8)
         t0 = time.perf_counter()
         buf[:] = 1
-        dt = time.perf_counter() - t0
-        rows.append(row(f"fig3/host_write_{mb}MB", dt * 1e6,
-                        f"gbps={mb / 1024 / dt:.1f}"))
+        cold = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        buf[:] = 2
+        warm = time.perf_counter() - t0
+        for phase, dt in (("cold", cold), ("warm", warm)):
+            rows.append(row(
+                f"fig3/host_write_{phase}_{mb}MB", dt * 1e6,
+                f"gbytes_per_s={mb * 2**20 / dt / 1e9:.2f}"))
+    # modeled stream time for one tiered edge-shard fill (core/tiered.py):
+    # a 64 MB shard crossing the far tier at hbm bandwidth — the per-miss
+    # cost the out-of-core schedule amortises against relax compute
+    shard_mb = 64
+    hbm_bw = TIERS["hbm"][0]
+    rows.append(row(
+        f"outofcore/shard_stream_{shard_mb}MB_model",
+        shard_mb * 2**20 / hbm_bw * 1e6,
+        f"bw_gbytes_per_s={hbm_bw / 1e9:.0f}"))
     return rows

@@ -15,6 +15,7 @@ instead of throwing the numbers away with the process.
   scaling      Fig 10/§6.2  strong scaling: sharded engine vs BSP baseline
   vs_cluster   Fig 11/§6.3  single machine vs BSP cluster engine
   comm_volume  §CVC         CVC vs full-mesh reduction volume, 1-8 devices
+  outofcore    §Thesis      streamed shards vs all-resident pool (tiered)
   kernels      —            Pallas kernel µs/call
   roofline     §Roofline    reads experiments/dryrun/*.json
 """
@@ -25,8 +26,8 @@ import sys
 import traceback
 
 from . import (algo_classes, common, comm_volume, frameworks, granularity,
-               kernels_bench, memtier, placement, roofline, scaling,
-               vs_cluster)
+               kernels_bench, memtier, outofcore, placement, roofline,
+               scaling, vs_cluster)
 
 SUITES = {
     "memtier": memtier,
@@ -37,6 +38,7 @@ SUITES = {
     "scaling": scaling,
     "vs_cluster": vs_cluster,
     "comm_volume": comm_volume,
+    "outofcore": outofcore,
     "kernels": kernels_bench,
     "roofline": roofline,
 }

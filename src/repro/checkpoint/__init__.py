@@ -1,1 +1,2 @@
-from .manager import CheckpointManager, restore_resharded, save_pytree, load_pytree  # noqa: F401
+from .manager import (CheckpointManager, load_pytree, open_graph,  # noqa: F401
+                      restore_resharded, save_graph, save_pytree)

@@ -14,9 +14,27 @@ Requirements at 1000-node scale, realised here at library level:
   idea from the paper, done properly for SPMD).
 * **Self-describing**: a JSON manifest carries step, wall-time, and user
   metadata (config digest) for audit.
-* **Rotation**: keep the last K checkpoints; deletion is also atomic.
+* **Rotation**: keep the last K checkpoints; deletion is also atomic —
+  and rotation sweeps crash-leftover ``*.tmp`` staging files, which
+  otherwise accumulate forever (saves serialize through ``wait()``, so any
+  tmp present at rotation time is stale by construction).
 
 Format: one ``.npz`` per checkpoint (path-flattened) + ``manifest.json``.
+
+Persistent graph store
+----------------------
+
+``save_graph`` / ``open_graph`` are the Metall analogue for the tiered
+out-of-core path (``core/tiered.py``): cut a graph once into block-granular
+host shards, persist one **uncompressed** ``.npz`` per shard plus a
+``graph_manifest.json`` written last (the commit record — a crash between
+shard writes leaves no manifest, and ``open_graph`` refuses cleanly), and
+on every later run map the shard arrays straight off disk.  Note
+``np.load(..., mmap_mode="r")`` silently ignores ``mmap_mode`` for ``.npz``
+archives (it returns plain in-memory arrays), so ``open_graph`` locates
+each stored ``.npy`` member inside the zip itself and hands it to
+``np.memmap`` — build once, map thereafter; pages fault in only when a
+shard is actually streamed.
 """
 
 from __future__ import annotations
@@ -63,16 +81,36 @@ def save_pytree(tree, directory: str, step: int, metadata: Optional[dict] = None
 
 
 def load_pytree(tree_like, directory: str, step: Optional[int] = None):
-    """Load into the structure of ``tree_like`` (shapes must match)."""
+    """Load into the structure of ``tree_like`` (shapes must match).
+
+    Structure mismatches raise ``ValueError`` (not ``assert``, which
+    vanishes under ``python -O``), cross-checked against both the stored
+    archive and — when it describes this step — the manifest's ``keys``.
+    """
     step = latest_step(directory) if step is None else step
     if step is None:
         raise FileNotFoundError(f"no checkpoint in {directory}")
     data = np.load(os.path.join(directory, f"step_{step:010d}.npz"))
+    want = sorted(_flatten(tree_like).keys())
+    stored = sorted(data.files)
+    mpath = os.path.join(directory, "manifest.json")
+    if os.path.exists(mpath):
+        with open(mpath) as f:
+            manifest = json.load(f)
+        if manifest.get("step") == step and manifest.get("keys") != stored:
+            raise ValueError(
+                f"checkpoint {directory} step {step} is corrupt: archive "
+                f"holds {stored}, manifest recorded {manifest.get('keys')}")
+    if want != stored:
+        raise ValueError(
+            f"checkpoint structure mismatch in {directory} step {step}: "
+            f"tree_like flattens to {want}, checkpoint stores {stored}")
+    new_leaves = [data[k] for k in want]
+    # want is sorted like _flatten's keys; rebuild in tree order
+    order = {k: i for i, k in enumerate(want)}
     flat_keys = list(_flatten(tree_like).keys())
-    leaves, treedef = jax.tree_util.tree_flatten(tree_like)
-    assert len(flat_keys) == len(leaves)
-    new_leaves = [data[k] for k in flat_keys]
-    return treedef.unflatten(new_leaves), step
+    treedef = jax.tree_util.tree_structure(tree_like)
+    return treedef.unflatten([new_leaves[order[k]] for k in flat_keys]), step
 
 
 def restore_resharded(tree_like, directory: str, shardings, step: Optional[int] = None):
@@ -132,6 +170,16 @@ class CheckpointManager:
                 os.remove(os.path.join(self.directory, f))
             except OSError:
                 pass
+        # sweep crash-leftover atomic-write staging files
+        # (step_*.npz.tmp / manifest.json.*.tmp).  Saves serialize through
+        # wait() before writing, so any tmp still present once a save has
+        # completed belongs to a previous process that died mid-write.
+        for f in os.listdir(self.directory):
+            if f.endswith(".tmp"):
+                try:
+                    os.remove(os.path.join(self.directory, f))
+                except OSError:
+                    pass
 
     def wait(self):
         if self._thread is not None and self._thread.is_alive():
@@ -148,3 +196,171 @@ class CheckpointManager:
     def latest_step(self) -> Optional[int]:
         self.wait()
         return latest_step(self.directory)
+
+
+# ---------------------------------------------------------------------------
+# Persistent graph store (Metall analogue for core/tiered.py)
+# ---------------------------------------------------------------------------
+
+GRAPH_MANIFEST = "graph_manifest.json"
+_GRAPH_FORMAT = "tiered-graph-v1"
+
+
+def _mmap_npz_member(path: str, name: str) -> Optional[np.ndarray]:
+    """Memory-map one array of an **uncompressed** ``.npz`` archive.
+
+    ``np.load(path, mmap_mode="r")`` ignores ``mmap_mode`` for zip archives
+    and reads the whole member into memory, so we find the stored ``.npy``
+    member's data offset ourselves (local zip header + npy header) and
+    hand it to ``np.memmap``.  Returns ``None`` when the member cannot be
+    mapped (compressed entry, unexpected header) — callers fall back to an
+    eager load.
+    """
+    import zipfile
+
+    from numpy.lib import format as npformat
+
+    try:
+        with zipfile.ZipFile(path) as zf:
+            info = zf.getinfo(name + ".npy")
+            if info.compress_type != zipfile.ZIP_STORED:
+                return None
+        with open(path, "rb") as f:
+            f.seek(info.header_offset)
+            hdr = f.read(30)
+            if hdr[:4] != b"PK\x03\x04":
+                return None
+            fnlen = int.from_bytes(hdr[26:28], "little")
+            exlen = int.from_bytes(hdr[28:30], "little")
+            f.seek(info.header_offset + 30 + fnlen + exlen)
+            version = npformat.read_magic(f)
+            if version == (1, 0):
+                shape, fortran, dtype = npformat.read_array_header_1_0(f)
+            elif version == (2, 0):
+                shape, fortran, dtype = npformat.read_array_header_2_0(f)
+            else:
+                return None
+            if fortran or dtype.hasobject:
+                return None
+            offset = f.tell()
+        return np.memmap(path, dtype=dtype, mode="r", offset=offset,
+                         shape=shape)
+    except (KeyError, OSError, ValueError):
+        return None
+
+
+def _load_shard_arrays(path: str, names=("src", "dst", "w")):
+    """Map (preferred) or load the named arrays of one shard archive."""
+    out = []
+    eager = None
+    for name in names:
+        arr = _mmap_npz_member(path, name)
+        if arr is None:
+            if eager is None:
+                eager = np.load(path)
+            arr = eager[name]
+        out.append(arr)
+    return tuple(out)
+
+
+def _shard_path(directory: str, sid: int) -> str:
+    return os.path.join(directory, f"shard_{sid:06d}.npz")
+
+
+def save_graph(g, directory: str, nshards: int = 8) -> str:
+    """Persist a graph as a tiered shard store: one uncompressed ``.npz``
+    per edge shard, a ``vertices.npz`` for the O(n) arrays, and
+    ``graph_manifest.json`` written **last** as the commit record.
+
+    ``g`` may be an in-memory ``core.Graph`` (it is cut with
+    ``tier_graph(g, nshards)``) or an already-cut ``TieredGraph`` (its
+    existing cut is persisted; ``nshards`` is ignored).  Each file is
+    staged to ``*.tmp`` and ``os.replace``d, and stale tmps from a
+    previous crashed save are swept first — a crash at any point leaves
+    either a complete, openable store or one ``open_graph`` refuses.
+    """
+    from ..core.tiered import TieredGraph, tier_graph
+
+    if not isinstance(g, TieredGraph):
+        g = tier_graph(g, nshards)
+    os.makedirs(directory, exist_ok=True)
+    for f in os.listdir(directory):
+        if f.endswith(".tmp"):
+            try:
+                os.remove(os.path.join(directory, f))
+            except OSError:
+                pass
+    for sid in range(g.nshards):
+        src, dst, w = g._host[sid]
+        final = _shard_path(directory, sid)
+        tmp = final + ".tmp"
+        with open(tmp, "wb") as f:
+            np.savez(f, src=np.asarray(src), dst=np.asarray(dst),
+                     w=np.asarray(w))  # savez (not _compressed): mappable
+        os.replace(tmp, final)
+    vtmp = os.path.join(directory, "vertices.npz.tmp")
+    with open(vtmp, "wb") as f:
+        np.savez(f, out_deg=np.asarray(g.out_deg, np.int32))
+    os.replace(vtmp, os.path.join(directory, "vertices.npz"))
+    manifest = {
+        "format": _GRAPH_FORMAT,
+        "n": g.n, "m": g.m, "n_pad": g.n_pad,
+        "block_size": g.block_size,
+        "nshards": g.nshards, "epd": g.epd,
+        "vtx_bounds": [int(x) for x in g.vtx_bounds],
+        "shard_sizes": [int(x) for x in g.shard_sizes],
+        "time": time.time(),
+    }
+    mtmp = os.path.join(directory, GRAPH_MANIFEST + ".tmp")
+    with open(mtmp, "w") as f:
+        json.dump(manifest, f)
+    os.replace(mtmp, os.path.join(directory, GRAPH_MANIFEST))
+    return directory
+
+
+def open_graph(directory: str, resident_shards: int = 2,
+               resident_bytes: Optional[int] = None):
+    """Open a persisted graph store as a ``TieredGraph`` whose host shards
+    are memory-mapped off disk (build once, map every run after).
+
+    Raises ``FileNotFoundError`` when the manifest is absent (save never
+    completed — the commit record is written last) and ``ValueError`` when
+    the manifest and the shard files disagree (truncated or missing
+    shards): a partial store is refused, never silently repaired.
+    """
+    from ..core.tiered import TieredGraph
+
+    mpath = os.path.join(directory, GRAPH_MANIFEST)
+    if not os.path.exists(mpath):
+        raise FileNotFoundError(
+            f"{directory} has no {GRAPH_MANIFEST} — either not a graph "
+            "store or a save crashed before committing; re-run save_graph")
+    with open(mpath) as f:
+        man = json.load(f)
+    if man.get("format") != _GRAPH_FORMAT:
+        raise ValueError(f"unknown graph store format {man.get('format')!r}")
+    nshards, epd = int(man["nshards"]), int(man["epd"])
+    shards = []
+    for sid in range(nshards):
+        path = _shard_path(directory, sid)
+        if not os.path.exists(path):
+            raise ValueError(
+                f"graph store {directory} is incomplete: manifest promises "
+                f"{nshards} shards but {os.path.basename(path)} is missing")
+        src, dst, w = _load_shard_arrays(path)
+        if not (src.shape == dst.shape == w.shape == (epd,)):
+            raise ValueError(
+                f"graph store {directory} shard {sid} has shape "
+                f"{src.shape}/{dst.shape}/{w.shape}, manifest says ({epd},)")
+        shards.append((src, dst, w))
+    out_deg = np.load(os.path.join(directory, "vertices.npz"))["out_deg"]
+    if resident_bytes is not None:
+        resident_shards = max(2, int(resident_bytes) // (epd * 12))
+    return TieredGraph(
+        n=int(man["n"]), m=int(man["m"]), n_pad=int(man["n_pad"]),
+        block_size=int(man["block_size"]), nshards=nshards, epd=epd,
+        vtx_bounds=np.asarray(man["vtx_bounds"], np.int64),
+        shard_sizes=np.asarray(man["shard_sizes"], np.int64),
+        host_shards=shards, out_deg=out_deg,
+        resident_shards=resident_shards,
+    )

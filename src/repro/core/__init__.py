@@ -4,6 +4,7 @@
 # Gill et al., "Single Machine Graph Analytics on Massive Datasets Using
 # Intel Optane DC Persistent Memory" (2019) — adapted to TPU/JAX.
 from . import algorithms, engine, frontier, graph, operators  # noqa: F401
-from . import partition, placement, sharded  # noqa: F401
+from . import partition, placement, sharded, tiered  # noqa: F401
 from .graph import Graph, from_coo  # noqa: F401
 from .sharded import ShardedGraph, shard_graph  # noqa: F401
+from .tiered import TieredGraph, tier_graph  # noqa: F401

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 
 from .. import frontier as fr
 from .. import operators as ops
-from ..engine import SparseLadderEngine, RunStats, run_dense
+from ..engine import SparseLadderEngine, RunStats, run_dense, run_host
 from ..graph import Graph
 
 INF = jnp.float32(jnp.finfo(jnp.float32).max)
@@ -42,12 +42,36 @@ def bfs_topo(g: Graph, src: int, max_rounds: int = 100_000):
         )
         return new, jnp.any(new != dist)
 
-    rounds, (dist, _) = run_dense(
-        step_correct, (dist0, jnp.bool_(True)), lambda s: s[1], max_rounds
+    io0 = _io_snapshot(g)
+    rounds, (dist, _) = _run_maybe_tiered(
+        g, step_correct, (dist0, jnp.bool_(True)), lambda s: s[1], max_rounds
     )
-    stats = RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
-                     edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
-    return dist, stats
+    return dist, _dense_stats(g, rounds, io0)
+
+
+def _io_snapshot(g):
+    return g.io.snapshot() if getattr(g, "is_tiered", False) else None
+
+
+def _run_maybe_tiered(g, step, state, cond, max_rounds):
+    """``run_dense`` — or the eager ``run_host`` when ``g`` streams edge
+    shards from host state and the step cannot be traced."""
+    runner = run_host if getattr(g, "is_tiered", False) else run_dense
+    return runner(step, state, cond, max_rounds)
+
+
+def _dense_stats(g, rounds, io0=None) -> RunStats:
+    """Stats for ``rounds`` dense rounds; on a tiered graph the edge and
+    h2d accounting comes from the stream-counter delta since ``io0``
+    instead of rounds·m."""
+    rounds = int(rounds)
+    stats = RunStats.from_graph(g, relaxes=rounds, rounds=rounds,
+                                dense_rounds=rounds)
+    if io0 is not None:
+        g.io.fold_delta(stats, io0)
+    else:
+        stats.edges_touched = rounds * g.m
+    return stats
 
 
 def bfs_dd_dense(g: Graph, src: int, max_rounds: int = 100_000):
@@ -60,12 +84,11 @@ def bfs_dd_dense(g: Graph, src: int, max_rounds: int = 100_000):
         new = ops.push_dense(g, dist, mask, dist, kind="min", use_weight=True)
         return new, ops.updated_mask(dist, new)
 
-    rounds, (dist, _) = run_dense(
-        step, (dist0, mask0), lambda s: jnp.any(s[1]), max_rounds
+    io0 = _io_snapshot(g)
+    rounds, (dist, _) = _run_maybe_tiered(
+        g, step, (dist0, mask0), lambda s: jnp.any(s[1]), max_rounds
     )
-    stats = RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
-                     edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
-    return dist, stats
+    return dist, _dense_stats(g, rounds, io0)
 
 
 def _sparse_step(g, dist, mask, *, capacity: int, budget: int):

@@ -14,7 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from .. import operators as ops
-from ..engine import RunStats, run_dense
+from ..engine import RunStats, run_dense, run_host
 from ..graph import Graph
 
 
@@ -76,13 +76,24 @@ def pr_push(
         resid = jnp.where(active, 0.0, resid) + added
         return rank, resid
 
-    rounds, (rank, resid) = run_dense(
+    # a tiered graph streams edge shards from host state inside the step,
+    # so rounds dispatch eagerly (run_host) and the edge / h2d accounting
+    # comes from the graph's stream counters instead of rounds·m
+    tiered = getattr(g, "is_tiered", False)
+    io0 = g.io.snapshot() if tiered else None
+    runner = run_host if tiered else run_dense
+    rounds, (rank, resid) = runner(
         step, (rank0, resid0), lambda s: jnp.any(s[1] > tol), max_iters
     )
     rank = rank + resid  # fold in the leftover residual
     rank = jnp.where(valid, rank / jnp.sum(rank), 0.0)
-    return rank, RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
-                          edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
+    stats = RunStats.from_graph(
+        g, relaxes=int(rounds), rounds=int(rounds),
+        edges_touched=0 if tiered else int(rounds) * g.m,
+        dense_rounds=int(rounds))
+    if tiered:
+        g.io.fold_delta(stats, io0)
+    return rank, stats
 
 
 VARIANTS = {"pull": pr_pull, "push": pr_push}

@@ -89,6 +89,15 @@ class RunStats:
     comm_elems: int = 0
     comm_bytes: int = 0
     reduce_axis_hops: int = 0
+    # host→device streaming of the out-of-core tiered path (core/tiered.py):
+    # edge-shard bytes copied in, shards streamed (pool misses) and
+    # scheduled shards already resident (pool hits).  Zero for in-memory
+    # graphs, and auditable the way comm_* is: every miss copies exactly
+    # one padded shard, so h2d_bytes == shards_streamed * g.shard_bytes
+    # identically (pinned by tests/test_tiered.py)
+    h2d_bytes: int = 0
+    shards_streamed: int = 0
+    buffer_hits: int = 0
     # execution geometry: device count and placement policy of the graph the
     # run executed on (1/"local" for an unsharded Graph)
     ndev: int = 1
@@ -149,6 +158,26 @@ def run_dense(
 
     rounds, out = jax.lax.while_loop(keep_going, body, (jnp.int32(0), state))
     return rounds, out
+
+
+def run_host(
+    step: Callable,
+    state,
+    cond: Callable,
+    max_rounds: int,
+):
+    """Eager counterpart of ``run_dense`` for graphs whose relaxation
+    cannot be traced into a while_loop — the tiered out-of-core path
+    (``core/tiered.py``) issues H2D copies and walks a host-side buffer
+    pool inside each step, so rounds dispatch from Python with one
+    blocking ``cond`` fetch per round (the streamed regime pays per-round
+    syncs; what it buys is edges never resident).  Same
+    ``(rounds, state)`` contract as ``run_dense``."""
+    rounds = 0
+    while rounds < max_rounds and bool(cond(state)):
+        state = step(state)
+        rounds += 1
+    return rounds, state
 
 
 # ---------------------------------------------------------------------------
@@ -322,9 +351,44 @@ class SparseLadderEngine:
 
 
     def run(self, labels, mask, max_rounds: int = 10_000):
+        if getattr(self.g, "is_tiered", False):
+            return self._run_streamed(labels, mask, max_rounds)
         if self.fused:
             return self._run_fused(labels, mask, max_rounds)
         return self._run_per_round(labels, mask, max_rounds)
+
+    # ---- streamed dispatch (out-of-core tiered graphs) -----------------
+
+    def _run_streamed(self, labels, mask, max_rounds: int):
+        """Per-round dispatch for a ``tiered.TieredGraph`` — the engine's
+        resident-budget path: the CSR lives behind a bounded pool of
+        device shard buffers, so steps cannot fuse into device-resident
+        while_loops (each round's relax streams shards from host state).
+        Instead the engine fetches ``(frontier_count, live_shard_mask)``
+        in ONE transfer per round (``round_live`` — the rung-scalar
+        analogue) and hands the schedule down via ``set_live_hint``; the
+        graph then interleaves each shard's async H2D prefetch with the
+        previous shard's relax.  Rounds that leave shards idle count as
+        sparse (shard-granular work-efficiency ⇒ bandwidth-efficiency);
+        rounds touching every shard count as dense.  Stream deltas fold
+        into ``h2d_bytes`` / ``shards_streamed`` / ``buffer_hits`` /
+        ``edges_touched`` at the end."""
+        g = self.g
+        self.stats.substrate = ops.get_substrate()
+        io0 = g.io.snapshot()
+        for _ in range(max_rounds):
+            count, live = jax.device_get(g.round_live(mask))
+            if int(count) == 0:
+                break
+            self.stats.rounds += 1
+            if int(live.sum()) < g.nshards:
+                self.stats.sparse_rounds += 1
+            else:
+                self.stats.dense_rounds += 1
+            g.set_live_hint(live)
+            labels, mask = self._dense_fn(g, labels, mask)
+        g.io.fold_delta(self.stats, io0)
+        return labels, mask
 
     # ---- device-resident rung execution (the default) -----------------
 

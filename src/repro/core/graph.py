@@ -103,6 +103,34 @@ class Graph:
         sharded container overrides this with the max per-shard mass."""
         return jnp.sum(jnp.where(mask, self.out_deg, 0))
 
+    @property
+    def csr_bytes(self) -> int:
+        """Bytes of the padded CSR edge arrays (col_idx + src_idx + edge_w)
+        — the quantity the tiered-memory path budgets against.  Vertex
+        arrays (O(n)) always stay device-resident; the edge arrays (O(m))
+        are what outgrows the fast tier on the paper's massive inputs."""
+        return self.m_pad * (4 + 4 + 4)
+
+
+def shard_ranges(g: Graph, nshards: int):
+    """Block-granular contiguous shard cut of the CSR edge arrays.
+
+    Returns ``(vtx_bounds, edge_bounds)``: shard s owns the out-edges of
+    vertices ``[vtx_bounds[s], vtx_bounds[s+1])``, which occupy the CSR
+    slice ``[edge_bounds[s], edge_bounds[s+1])`` — contiguous because
+    ``from_coo`` lays edges out (src, dst)-sorted.  The vertex cut is the
+    ``placement.shard_owner("blocked")`` rule (ceil(n_pad / nshards),
+    rounded up to whole ``block_size`` blocks — placement never operates
+    below block granularity, the huge-page rule P2), so tiered host shards
+    reuse exactly the ``partition_1d`` homing metadata.
+    """
+    per = -(-g.n_pad // nshards)            # ceil: the blocked-OEC cut
+    per = round_up(per, g.block_size)
+    vtx = np.minimum(np.arange(nshards + 1, dtype=np.int64) * per, g.n_pad)
+    rp = np.asarray(g.row_ptr)
+    edge = rp[vtx].astype(np.int64)
+    return vtx, edge
+
 
 def from_coo(
     src: np.ndarray,
@@ -128,9 +156,17 @@ def from_coo(
         w = np.concatenate([w, w])
 
     if dedup:
-        keep = src != dst  # drop self loops as well
+        # self-loops are dropped (no algorithm here relaxes them, and the
+        # oriented tc adjacency requires their absence); duplicate
+        # (src, dst) edges keep the MINIMUM weight — keeping an arbitrary
+        # duplicate (the old first-in-sorted-key-order rule) made weighted
+        # sssp/bfs results depend on input edge order, since which weight
+        # survived was an accident of the permutation
+        keep = src != dst
         src, dst, w = src[keep], dst[keep], w[keep]
         key = src * np.int64(n) + dst
+        order = np.lexsort((w, key))     # per key, smallest weight first
+        key, src, dst, w = key[order], src[order], dst[order], w[order]
         _, first = np.unique(key, return_index=True)
         src, dst, w = src[first], dst[first], w[first]
 

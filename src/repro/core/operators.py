@@ -164,6 +164,16 @@ def push_dense(
     reduction and stays).
     """
     sub = _resolve(substrate)
+    tiered = getattr(g, "tiered_push_dense", None)
+    if tiered is not None:
+        # out-of-core dispatch (core/tiered.py): stream the shards the
+        # active mask touches through the bounded device buffer pool; the
+        # deterministic-add mode is folded per shard in ascending shard
+        # order (pool-size independent — see the module's reduction-order
+        # contract)
+        return tiered(src_val, active, out_init, kind, use_weight, sub,
+                      reverse=reverse, det=(kind == "add" and
+                                            _deterministic_add))
     sharded = getattr(g, "sharded_push_dense", None)
     if sharded is not None:
         if kind == "add" and _deterministic_add:
@@ -201,6 +211,10 @@ def pull_dense(
     (in-edges are grouped by destination, ``indices_are_sorted=True``); the
     Pallas substrate walks the same dst-sorted edge blocks."""
     sub = _resolve(substrate)
+    if getattr(g, "is_tiered", False):
+        raise NotImplementedError(
+            "tiered graphs keep only out-edge shards host-resident; there "
+            "is no CSC mirror to pull from — use push-style algorithms")
     sharded = getattr(g, "sharded_pull_dense", None)
     if sharded is not None:
         if kind == "add" and _deterministic_add:
@@ -377,6 +391,14 @@ def sparse_round(
     escalation counter in the loop carry (``engine._sparse_stretch``).
     """
     sub = _resolve(substrate)
+    if getattr(g, "is_tiered", False):
+        # shard-granular work efficiency: the masked push already streams
+        # only the shards the frontier's vertices live in, which IS the
+        # sparse round's point on a tiered graph — compaction into a
+        # worklist would buy nothing, the bandwidth saving comes from the
+        # shards never fetched
+        out = push_dense(g, src_val, mask, out_init, kind, use_weight, sub)
+        return out, jnp.int32(0)
     fused = getattr(g, "sharded_sparse_round", None)
     if fused is not None:
         if kind == "add" and _deterministic_add:

@@ -1,0 +1,338 @@
+"""Out-of-core tiered execution: host-resident edge shards streamed on demand.
+
+This is the paper's actual thesis mapped to the accelerator tier stack: the
+graph's CSR does **not** fit in fast memory (6 TB Optane behind a DRAM cache
+there; host RAM behind a bounded device budget here), and the runtime makes
+work-efficiency imply bandwidth-efficiency — only the edges the live
+frontier needs ever cross the slow tier.
+
+:class:`TieredGraph` keeps the O(m) edge arrays host-resident (numpy, or
+mmap-backed views of the persistent store — ``checkpoint.save_graph`` /
+``open_graph``), cut into ``nshards`` block-granular contiguous shards by
+the same blocked-OEC rule as ``partition_1d`` (``graph.shard_ranges``).
+Only the O(n) vertex arrays (degrees, labels, frontier masks) are
+device-resident.  Edge shards are streamed into a small pool of
+``resident_shards`` uniform device buffers:
+
+* **Frontier-driven schedule** — a relax only streams the shards whose
+  vertex range intersects the live frontier (``round_live`` computes the
+  per-shard activity vector on device; the engine fetches it together with
+  the round's termination scalar in one transfer and passes it down as the
+  schedule).  Work-efficient ⇒ bandwidth-efficient: the H2D traffic of a
+  run is proportional to the edges its frontiers actually touched, not to
+  rounds × |CSR|.
+* **Double-buffered streaming** — while shard *i* relaxes, shard *i+1*'s
+  H2D copy is already in flight (``jax.device_put`` is async; the relax
+  dispatch is async too, so the copy overlaps the previous shard's
+  compute).  The pool is LRU: shards still resident from an earlier round
+  are **buffer hits** and cost zero bytes — frontier locality across
+  rounds is free, exactly the paper's DRAM-cache argument.
+* **One executable for every shard** — shards are padded to one uniform
+  ``epd`` slot count, so the per-shard relax jits **once** per
+  (kind, substrate, mode) and replays for every shard of every round (the
+  few-big-pages amortisation P2; ``resident_shards`` bounds live buffers
+  the way the ladder bounds recompiles).
+
+Accounting is auditable the way ``comm_*`` is: every miss streams exactly
+``shard_bytes`` (the padded src/dst/w triple), so
+``RunStats.h2d_bytes == shards_streamed * shard_bytes`` identically, and
+``buffer_hits`` counts scheduled shards already resident.
+
+Reduction-order contract
+------------------------
+
+Scheduled shards always fold into the accumulator in **ascending shard
+order**, so labels are a pure function of the edge multiset and the shard
+cut — never of the pool size, hit pattern, or how much of the graph was
+resident.  ``min``/``max``/``or`` relaxes are therefore bitwise identical
+to the all-resident single-``Graph`` run; float ``add`` is bitwise
+identical across *every* ``resident_shards`` setting (streamed ≡
+all-resident-pool) and associates per shard, which differs from the
+unsharded flat-edge-list order (same caveat as ``sharded.py``'s
+partition-order note; ``tests/test_tiered.py`` pins both claims).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import OrderedDict
+from functools import partial
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import graph_ops as gk
+from .graph import Graph, round_up, shard_ranges
+
+
+@dataclasses.dataclass
+class StreamIO:
+    """Cumulative streaming counters of one :class:`TieredGraph` (the
+    engine folds per-run deltas into ``RunStats``)."""
+
+    h2d_bytes: int = 0
+    shards_streamed: int = 0
+    buffer_hits: int = 0
+    edges_relaxed: int = 0  # edge slots processed (epd per scheduled shard)
+
+    def snapshot(self) -> Tuple[int, int, int, int]:
+        return (self.h2d_bytes, self.shards_streamed, self.buffer_hits,
+                self.edges_relaxed)
+
+    def fold_delta(self, stats, before: Tuple[int, int, int, int]) -> None:
+        """Add the counters accumulated since ``before`` into a RunStats."""
+        stats.h2d_bytes += self.h2d_bytes - before[0]
+        stats.shards_streamed += self.shards_streamed - before[1]
+        stats.buffer_hits += self.buffer_hits - before[2]
+        stats.edges_touched += self.edges_relaxed - before[3]
+
+
+@partial(jax.jit, static_argnames=("kind", "use_weight", "sub", "det",
+                                   "reverse"))
+def _shard_relax(src, dst, w, src_val, active, acc, *, kind, use_weight,
+                 sub, det, reverse):
+    """Relax one device-resident shard into the running accumulator.
+
+    Shapes are uniform across shards (``epd`` slots), so this traces once
+    per (kind, use_weight, substrate, det, reverse) and the compiled
+    executable replays for every shard of every round.
+    """
+    s, d = (dst, src) if reverse else (src, dst)
+    if kind == "add" and det:
+        return gk.det_push_ref(s, d, w, src_val, active, acc, use_weight)
+    if sub == "pallas":
+        return gk.edge_relax(s, d, w, active, src_val, acc, kind=kind,
+                             use_weight=use_weight, vertex_mask=True)
+    return gk.push_ref(s, d, w, src_val, active, acc, kind, use_weight)
+
+
+@partial(jax.jit, static_argnames=("nshards",))
+def _round_live(owner, out_deg, mask, nshards: int):
+    """Device-side ``(frontier_count, live_shard_mask)`` for one round:
+    shard s is live iff an active vertex with out-edges lives in its
+    range.  One fused computation — the engine fetches both in a single
+    transfer (the per-round sync the streamed path pays instead of the
+    fused stretch's per-switch sync)."""
+    act = mask & (out_deg > 0)
+    per = jnp.zeros((nshards,), jnp.int32).at[owner].add(act.astype(jnp.int32))
+    return jnp.sum(mask.astype(jnp.int32)), per > 0
+
+
+class TieredGraph:
+    """Host-resident sharded CSR behind a bounded device buffer pool.
+
+    Quacks like :class:`~repro.core.graph.Graph` for the vertex-side
+    surface (``vertex_full`` / ``valid_vertex_mask`` / ``out_deg`` /
+    ``budget_edge_mass``) and dispatches edge relaxation through
+    ``tiered_push_dense`` (``core.operators`` routes ``push_dense`` and
+    ``sparse_round`` here).  NOT a pytree: the buffer pool and stream
+    counters are host state — never pass a TieredGraph through ``jit``;
+    the jitted pieces are the per-shard relax and the liveness scalars.
+    """
+
+    is_tiered = True
+    ndev = 1
+    placement = "tiered"
+    has_csc = False
+
+    def __init__(
+        self,
+        *,
+        n: int,
+        m: int,
+        n_pad: int,
+        block_size: int,
+        nshards: int,
+        epd: int,
+        vtx_bounds: np.ndarray,
+        shard_sizes: np.ndarray,
+        host_shards: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
+        out_deg: np.ndarray,
+        resident_shards: int,
+    ):
+        if resident_shards < 2:
+            raise ValueError(
+                "resident_shards must be >= 2: double-buffered streaming "
+                "needs a relax buffer and a prefetch buffer")
+        if resident_shards > nshards:
+            resident_shards = nshards
+        assert len(host_shards) == nshards
+        self.n, self.m = int(n), int(m)
+        self.n_pad, self.block_size = int(n_pad), int(block_size)
+        self.nshards, self.epd = int(nshards), int(epd)
+        self.resident_shards = int(resident_shards)
+        self.vtx_bounds = np.asarray(vtx_bounds, np.int64)
+        self.shard_sizes = np.asarray(shard_sizes, np.int64)
+        self._host = list(host_shards)
+        # vertex tier: O(n) arrays stay device-resident for the whole run
+        self.out_deg = jnp.asarray(np.asarray(out_deg, np.int32))
+        owner = np.searchsorted(self.vtx_bounds, np.arange(n_pad),
+                                side="right") - 1
+        self.owner = jnp.asarray(np.clip(owner, 0, nshards - 1).astype(
+            np.int32))
+        self._pool: "OrderedDict[int, tuple]" = OrderedDict()
+        self._live_hint: Optional[np.ndarray] = None
+        self.io = StreamIO()
+
+    # ---- Graph-compatible surface -------------------------------------
+    @property
+    def sentinel(self) -> int:
+        return self.n_pad - 1
+
+    @property
+    def m_pad(self) -> int:
+        return self.nshards * self.epd
+
+    @property
+    def shard_bytes(self) -> int:
+        """Bytes one shard occupies in a device buffer (padded src/dst/w
+        triple) — the exact per-miss H2D cost, and the unit of the
+        ``h2d_bytes == shards_streamed * shard_bytes`` model."""
+        return self.epd * (4 + 4 + 4)
+
+    @property
+    def csr_bytes(self) -> int:
+        """Total streamable CSR bytes (all shards)."""
+        return self.nshards * self.shard_bytes
+
+    @property
+    def resident_budget(self) -> int:
+        """Device bytes the buffer pool may occupy — the tier budget the
+        out-of-core contract is measured against (``csr_bytes`` must be
+        allowed to exceed it)."""
+        return self.resident_shards * self.shard_bytes
+
+    def vertex_full(self, fill, dtype) -> jax.Array:
+        return jnp.full((self.n_pad,), fill, dtype=dtype)
+
+    def valid_vertex_mask(self) -> jax.Array:
+        return jnp.arange(self.n_pad) < self.n
+
+    def budget_edge_mass(self, mask: jax.Array) -> jax.Array:
+        return jnp.sum(jnp.where(mask, self.out_deg, 0))
+
+    # ---- streaming core ------------------------------------------------
+    def round_live(self, mask: jax.Array):
+        """``(count, live)`` device scalars for one round (see
+        ``_round_live``).  The engine fetches the pair in one transfer and
+        hands ``live`` back via ``set_live_hint`` so the relax itself pays
+        no extra sync."""
+        return _round_live(self.owner, self.out_deg, mask, self.nshards)
+
+    def set_live_hint(self, live: np.ndarray) -> None:
+        """Provide the next relax's shard schedule (a host bool vector of
+        length ``nshards``); consumed by exactly one ``tiered_push_dense``."""
+        self._live_hint = np.asarray(live)
+
+    def _fetch(self, sid: int):
+        """Device buffer of shard ``sid``; a pool hit costs zero bytes, a
+        miss streams the shard (async H2D), evicting LRU shards beyond the
+        pool budget.  Every scheduled shard passes through here exactly
+        once per relax, so ``buffer_hits + shards_streamed`` equals total
+        shards scheduled — a hit is judged at fetch time, AFTER this
+        relax's own earlier prefetches may have evicted it (a pool smaller
+        than the round's schedule really does restream, and the counters
+        must say so)."""
+        pool = self._pool
+        if sid in pool:
+            pool.move_to_end(sid)
+            self.io.buffer_hits += 1
+            return pool[sid]
+        while len(pool) >= self.resident_shards:
+            pool.popitem(last=False)
+        s, d, w = self._host[sid]
+        # one async H2D per array: jax.device_put returns immediately, so
+        # the copy overlaps the previous shard's relax dispatch
+        buf = (jax.device_put(s), jax.device_put(d), jax.device_put(w))
+        pool[sid] = buf
+        self.io.shards_streamed += 1
+        self.io.h2d_bytes += self.shard_bytes
+        return buf
+
+    def _schedule(self, active) -> list[int]:
+        """Shard schedule for a forward masked push: the live-hint when the
+        engine pre-fetched it with the round scalars, else computed (and
+        fetched) here."""
+        hint, self._live_hint = self._live_hint, None
+        if hint is None:
+            _, live = jax.device_get(self.round_live(active))
+            hint = np.asarray(live)
+        return [int(x) for x in np.flatnonzero(hint)]
+
+    def tiered_push_dense(self, src_val, active, out_init, kind, use_weight,
+                          substrate, reverse=False, det=False):
+        """Masked push over the streamed shards (``operators.push_dense``
+        dispatch target; ``sparse_round`` lowers here too — the schedule
+        already is the frontier's shard set, which is the sparse round's
+        work-efficiency at shard granularity).
+
+        Scheduled shards fold into the accumulator in ascending shard
+        order while the next shard's copy is in flight (double buffering).
+        ``reverse=True`` (bc's backward sweep) activates on destinations,
+        which any shard may hold — it schedules every shard.
+        """
+        self._live_hint = self._live_hint if not reverse else None
+        if reverse:
+            sched = list(range(self.nshards))
+        else:
+            sched = self._schedule(active)
+        self.io.edges_relaxed += len(sched) * self.epd
+        acc = out_init
+        if not sched:
+            return acc
+        cur = self._fetch(sched[0])
+        for i, sid in enumerate(sched):
+            buf = cur
+            if i + 1 < len(sched):
+                cur = self._fetch(sched[i + 1])  # prefetch overlaps relax
+            acc = _shard_relax(buf[0], buf[1], buf[2], src_val, active, acc,
+                               kind=kind, use_weight=use_weight,
+                               sub=substrate, det=det, reverse=reverse)
+        return acc
+
+
+def tier_graph(
+    g: Graph,
+    nshards: int,
+    resident_shards: int = 2,
+    *,
+    resident_bytes: Optional[int] = None,
+) -> TieredGraph:
+    """Cut an in-memory ``Graph`` into a :class:`TieredGraph`.
+
+    ``nshards`` block-granular contiguous shards (``graph.shard_ranges``),
+    each padded to one uniform ``epd`` slot count; ``resident_shards`` (or
+    a byte budget via ``resident_bytes``, floored at the 2 double-buffering
+    needs) bounds the device pool.  The source graph's device CSR is NOT
+    retained — the host shard copies are the only edge storage, which is
+    the point.  (For multi-hundred-MB graphs, build once with
+    ``checkpoint.save_graph`` and reopen with ``checkpoint.open_graph`` to
+    skip this cut and mmap the shards instead.)
+    """
+    vtx, eb = shard_ranges(g, nshards)
+    sizes = np.diff(eb)
+    epd = round_up(max(int(sizes.max()), 1), 8)
+    if resident_bytes is not None:
+        resident_shards = max(2, int(resident_bytes) // (epd * 12))
+    src = np.asarray(g.src_idx)
+    dst = np.asarray(g.col_idx)
+    w = np.asarray(g.edge_w)
+    sent = g.n_pad - 1
+    shards = []
+    for s in range(nshards):
+        lo, hi = int(eb[s]), int(eb[s + 1])
+        ss = np.full((epd,), sent, np.int32)
+        dd = np.full((epd,), sent, np.int32)
+        ww = np.zeros((epd,), np.float32)
+        ss[: hi - lo] = src[lo:hi]
+        dd[: hi - lo] = dst[lo:hi]
+        ww[: hi - lo] = w[lo:hi]
+        shards.append((ss, dd, ww))
+    return TieredGraph(
+        n=g.n, m=g.m, n_pad=g.n_pad, block_size=g.block_size,
+        nshards=nshards, epd=epd, vtx_bounds=vtx, shard_sizes=sizes,
+        host_shards=shards, out_deg=np.asarray(g.out_deg),
+        resident_shards=resident_shards,
+    )

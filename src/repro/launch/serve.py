@@ -43,7 +43,9 @@ class Server:
         self.params = params if params is not None else T.init(
             jax.random.PRNGKey(seed), cfg)
         self.cache = T.init_cache(cfg, max_batch, max_seq)
-        self.active = jnp.zeros((max_batch,), bool)
+        # slot occupancy lives in free_slots/slots; tick() rebuilds the
+        # device-side live mask from them every step (no separate
+        # scheduler state to drift out of sync)
         self.free_slots = list(range(max_batch))
         self.slots: List[Optional[Request]] = [None] * max_batch
         self._decode = jax.jit(T.make_decode(cfg))

@@ -1,0 +1,250 @@
+"""Out-of-core tiered execution + persistent graph store.
+
+The subsystem's contract (core/tiered.py, checkpoint.save_graph/open_graph):
+
+* streamed execution is **invisible in the labels** — bfs (min relax) is
+  bitwise identical across streamed pool / all-resident pool / plain
+  in-memory Graph, and float-add folds are bitwise identical across every
+  pool size (the ascending-shard reduction-order contract);
+* the bandwidth accounting is **exact** — ``h2d_bytes == shards_streamed ×
+  shard_bytes`` identically, and ``buffer_hits + shards_streamed`` counts
+  every scheduled shard;
+* the store is **crash-safe** — the manifest commits last, so a kill
+  between shard writes leaves a store ``open_graph`` refuses cleanly;
+* ``from_coo`` dedup keeps the **minimum** weight per (src, dst) so
+  weighted results cannot depend on input edge order.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.checkpoint import open_graph, save_graph
+from repro.core import Graph, TieredGraph, from_coo, tier_graph
+from repro.core import operators as ops
+from repro.core.algorithms import bfs, pagerank
+from repro.core.graph import shard_ranges
+from repro.graphs import generators as gen
+
+
+def _test_graph(seed=3, n=300, m=2500, block=32):
+    src, dst, n = gen.erdos(n, m, seed=seed)
+    r = np.random.default_rng(seed)
+    w = r.uniform(0.5, 3.0, len(src)).astype(np.float32)
+    return from_coo(src, dst, n, w, block_size=block)
+
+
+# ---------------------------------------------------------------------------
+# shard cut + budget accounting
+# ---------------------------------------------------------------------------
+
+def test_shard_ranges_cover_all_edges_block_granular():
+    g = _test_graph()
+    vtx, edge = shard_ranges(g, 6)
+    assert vtx[0] == 0 and vtx[-1] == g.n_pad
+    assert edge[0] == 0 and edge[-1] == g.m  # true edges; padding excluded
+    assert (np.diff(vtx) >= 0).all() and (np.diff(edge) >= 0).all()
+    # interior bounds sit on block boundaries (the blocked-OEC rule)
+    assert all(int(v) % g.block_size == 0 for v in vtx[:-1])
+
+
+def test_tier_graph_budget_vs_csr():
+    g = _test_graph()
+    tg = tier_graph(g, nshards=8, resident_shards=2)
+    assert tg.csr_bytes == tg.nshards * tg.shard_bytes
+    assert tg.resident_budget == 2 * tg.shard_bytes
+    assert tg.csr_bytes >= 4 * tg.resident_budget
+    with pytest.raises(ValueError):
+        tier_graph(g, nshards=8, resident_shards=1)  # no double buffer
+
+
+# ---------------------------------------------------------------------------
+# streamed == resident == in-memory
+# ---------------------------------------------------------------------------
+
+def test_bfs_streamed_bitwise_vs_plain_and_resident():
+    g = _test_graph()
+    ref = np.asarray(bfs.bfs_dd_sparse(g, 0)[0])
+    for pool in (2, 3, 8):
+        tg = tier_graph(g, nshards=8, resident_shards=pool)
+        got, stats = bfs.bfs_dd_sparse(tg, 0)
+        np.testing.assert_array_equal(ref, np.asarray(got))
+        assert stats.placement == "tiered" and stats.rounds > 0
+
+
+def test_pagerank_bitwise_across_pool_sizes_allclose_vs_plain():
+    g = _test_graph(seed=9)
+    ref = np.asarray(pagerank.pr_push(g, max_iters=80)[0])
+    outs = []
+    for pool in (2, 4, 8):
+        tg = tier_graph(g, nshards=8, resident_shards=pool)
+        outs.append(np.asarray(pagerank.pr_push(tg, max_iters=80)[0]))
+    # the ascending-shard fold is a pure function of the cut, not the pool
+    np.testing.assert_array_equal(outs[0], outs[1])
+    np.testing.assert_array_equal(outs[0], outs[2])
+    np.testing.assert_allclose(outs[0], ref, rtol=1e-5, atol=1e-8)
+
+
+def test_reverse_push_streams_all_shards():
+    g = _test_graph(seed=4)
+    tg = tier_graph(g, nshards=4, resident_shards=2)
+    vals = jnp.asarray(np.random.default_rng(0).uniform(
+        0, 5, g.n_pad).astype(np.float32))
+    active = g.valid_vertex_mask()
+    want = ops.push_dense(g, vals, active, vals, kind="min", reverse=True)
+    got = ops.push_dense(tg, vals, active, vals, kind="min", reverse=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    # reverse activates on destinations → every shard was scheduled
+    assert tg.io.edges_relaxed == tg.nshards * tg.epd
+
+
+def test_pull_refused_on_tiered():
+    tg = tier_graph(_test_graph(), nshards=4)
+    with pytest.raises(NotImplementedError):
+        ops.pull_dense(tg, tg.vertex_full(0.0, jnp.float32),
+                       tg.valid_vertex_mask(),
+                       tg.vertex_full(0.0, jnp.float32), kind="min")
+
+
+# ---------------------------------------------------------------------------
+# streaming accounting: the analytic h2d model
+# ---------------------------------------------------------------------------
+
+def test_h2d_matches_analytic_model_exactly():
+    g = _test_graph(seed=11)
+    for pool in (2, 3):
+        tg = tier_graph(g, nshards=8, resident_shards=pool)
+        _, stats = bfs.bfs_dd_sparse(tg, 0)
+        assert stats.h2d_bytes == stats.shards_streamed * tg.shard_bytes
+        # every scheduled shard was either a hit or a stream
+        sched = stats.edges_touched // tg.epd
+        assert stats.buffer_hits + stats.shards_streamed == sched
+        assert stats.edges_touched == sched * tg.epd
+
+
+def test_all_resident_pool_streams_each_shard_at_most_once():
+    g = _test_graph(seed=12)
+    tg = tier_graph(g, nshards=8, resident_shards=8)
+    _, s1 = bfs.bfs_dd_sparse(tg, 0)
+    assert s1.shards_streamed <= tg.nshards  # cold fills only
+    _, s2 = bfs.bfs_dd_sparse(tg, 1)
+    assert s2.shards_streamed == 0  # warm pool: zero H2D bytes
+    assert s2.h2d_bytes == 0 and s2.buffer_hits > 0
+
+
+# ---------------------------------------------------------------------------
+# persistent graph store
+# ---------------------------------------------------------------------------
+
+def test_store_roundtrip_and_mmap(tmp_path):
+    g = _test_graph(seed=5)
+    save_graph(g, str(tmp_path), nshards=6)
+    tg = open_graph(str(tmp_path), resident_shards=2)
+    assert isinstance(tg, TieredGraph)
+    # uncompressed members really are memory-mapped, not eagerly read
+    assert isinstance(tg._host[0][0], np.memmap)
+    ref = np.asarray(bfs.bfs_dd_sparse(g, 0)[0])
+    np.testing.assert_array_equal(ref, np.asarray(bfs.bfs_dd_sparse(tg, 0)[0]))
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_store_accepts_pre_cut_tiered_graph(tmp_path):
+    g = _test_graph(seed=6)
+    tg = tier_graph(g, nshards=4, resident_shards=2)
+    save_graph(tg, str(tmp_path))
+    re = open_graph(str(tmp_path))
+    assert re.nshards == 4 and re.epd == tg.epd
+    np.testing.assert_array_equal(np.asarray(tg._host[1][0]),
+                                  np.asarray(re._host[1][0]))
+
+
+def test_store_refuses_uncommitted_save(tmp_path):
+    g = _test_graph(seed=7)
+    save_graph(g, str(tmp_path), nshards=4)
+    os.remove(os.path.join(str(tmp_path), "graph_manifest.json"))
+    with pytest.raises(FileNotFoundError):
+        open_graph(str(tmp_path))
+
+
+def test_store_refuses_missing_and_truncated_shards(tmp_path):
+    g = _test_graph(seed=8)
+    save_graph(g, str(tmp_path), nshards=4)
+    shard = os.path.join(str(tmp_path), "shard_000002.npz")
+    os.remove(shard)
+    with pytest.raises(ValueError, match="incomplete"):
+        open_graph(str(tmp_path))
+    # a wrong-shape shard (e.g. from a store written with another cut) is
+    # also refused, not silently mixed in
+    other = tier_graph(g, nshards=2, resident_shards=2)
+    np.savez(shard, src=np.asarray(other._host[0][0]),
+             dst=np.asarray(other._host[0][1]),
+             w=np.asarray(other._host[0][2]))
+    with pytest.raises(ValueError, match="shard 2"):
+        open_graph(str(tmp_path))
+
+
+def test_store_resave_sweeps_stale_tmps(tmp_path):
+    g = _test_graph(seed=13)
+    stale = os.path.join(str(tmp_path), "shard_000000.npz.tmp")
+    os.makedirs(str(tmp_path), exist_ok=True)
+    with open(stale, "wb") as f:
+        f.write(b"crashed mid-write")
+    save_graph(g, str(tmp_path), nshards=2)
+    assert not os.path.exists(stale)
+    open_graph(str(tmp_path))  # and the store is healthy
+
+
+# ---------------------------------------------------------------------------
+# checkpoint manager satellites (tmp sweep, real load errors)
+# ---------------------------------------------------------------------------
+
+def test_manager_rotation_sweeps_stale_tmps(tmp_path):
+    from repro.checkpoint import CheckpointManager
+
+    for junk in ("step_0000000009.npz.tmp", "manifest.json.7.tmp"):
+        with open(os.path.join(str(tmp_path), junk), "w") as f:
+            f.write("leftover")
+    m = CheckpointManager(str(tmp_path), keep_last=2)
+    m.save({"a": jnp.ones((3,))}, 1)
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_load_pytree_structure_mismatch_raises(tmp_path):
+    from repro.checkpoint import load_pytree, save_pytree
+
+    save_pytree({"a": jnp.ones((3,))}, str(tmp_path), 1)
+    with pytest.raises(ValueError, match="structure mismatch"):
+        load_pytree({"b": jnp.ones((3,))}, str(tmp_path))
+
+
+def test_load_pytree_detects_manifest_archive_divergence(tmp_path):
+    from repro.checkpoint import load_pytree, save_pytree
+
+    save_pytree({"a": jnp.ones((3,))}, str(tmp_path), 1)
+    mpath = os.path.join(str(tmp_path), "manifest.json")
+    with open(mpath) as f:
+        man = json.load(f)
+    man["keys"] = ["a", "ghost"]
+    with open(mpath, "w") as f:
+        json.dump(man, f)
+    with pytest.raises(ValueError, match="corrupt"):
+        load_pytree({"a": jnp.ones((3,))}, str(tmp_path))
+
+
+# ---------------------------------------------------------------------------
+# from_coo dedup: minimum weight per (src, dst), self-loops dropped
+# ---------------------------------------------------------------------------
+
+def test_dedup_keeps_minimum_weight_and_drops_self_loops():
+    src = np.array([0, 1, 1, 1, 2, 2])
+    dst = np.array([1, 2, 2, 2, 2, 0])
+    w = np.array([5.0, 3.0, 1.5, 4.0, 9.0, 2.0], np.float32)  # 2→2 self-loop
+    g = from_coo(src, dst, 3, w, block_size=16)
+    assert g.m == 3  # (0,1), (1,2) deduped, (2,2) dropped, (2,0)
+    es, ed, ew = (np.asarray(g.src_idx)[: g.m], np.asarray(g.col_idx)[: g.m],
+                  np.asarray(g.edge_w)[: g.m])
+    got = {(int(s), int(d)): float(x) for s, d, x in zip(es, ed, ew)}
+    assert got == {(0, 1): 5.0, (1, 2): 1.5, (2, 0): 2.0}
