@@ -18,6 +18,12 @@ what makes that true; this module makes CI *enforce* that it stays true:
   labels must have come out bitwise equal, and ``h2d_bytes`` must match
   the analytic ``shards_streamed × shard_bytes`` model exactly — the
   acceptance contract of the tiered subsystem (core/tiered.py).
+* ``serve`` — gate the multi-source serving tier (``BENCH_serving.json``):
+  at batch 8 the batched ``edges_per_source`` must be ≤ ``--max-frac``
+  (default 0.5×) of the sequential per-source cost for every gated
+  algorithm, with the lane-vs-per-source ``bitwise_equal`` flag set, and
+  the warmed GraphServer row must clear the ``--min-qps`` floor — the
+  acceptance contract of core/multisource.py + launch/graph_serve.py.
 * ``trend`` — diff the current file against the previous successful main
   run's artifact: per-row wall-clock and ``comm_elems`` deltas land in
   the job summary, so the perf trajectory is visible per PR instead of
@@ -160,6 +166,65 @@ def cmd_ooc(args) -> int:
     return 0
 
 
+def cmd_serve(args) -> int:
+    rows = _load(args.bench)
+    lines = [
+        f"## multi-source serving gate (batched ≤ {args.max_frac:g}× "
+        f"sequential edges/source; qps ≥ {args.min_qps:g})",
+        "",
+        "| algo | seq edges/src | batched edges/src | frac | bitwise | gate |",
+        "|:-----|--------------:|------------------:|-----:|:--------|:-----|",
+    ]
+    failures = []
+    for algo in [a for a in args.algos.split(",") if a]:
+        sname, bname = f"serving/seq_{algo}", f"serving/batched_{algo}_b8"
+        if sname not in rows or bname not in rows:
+            failures.append(f"missing row {sname} or {bname}")
+            lines.append(f"| {algo} | — | — | — | — | MISSING |")
+            continue
+        sst = rows[sname].get("stats") or {}
+        bst = rows[bname].get("stats") or {}
+        problems = []
+        seq_eps = sst.get("edges_per_source", 0)
+        bat_eps = bst.get("edges_per_source", 0)
+        if seq_eps <= 0 or bat_eps <= 0:
+            problems.append("edges_per_source missing/zero")
+            frac = float("inf")
+        else:
+            frac = bat_eps / seq_eps
+            if frac > args.max_frac:
+                problems.append(
+                    f"batched {bat_eps:.0f} edges/src > {args.max_frac:g}× "
+                    f"sequential {seq_eps:.0f} (frac {frac:.2f})")
+        bitwise = bool(bst.get("bitwise_equal", 0))
+        if not bitwise:
+            problems.append("batched lanes not bitwise equal to per-source")
+        lines.append(
+            f"| {algo} | {seq_eps:,.0f} | {bat_eps:,.0f} | {frac:.2f}× |"
+            f" {'ok' if bitwise else '**FAIL**'} |"
+            f" {'ok' if not problems else '**FAIL**'} |")
+        failures += [f"{algo}: {p}" for p in problems]
+    srv = rows.get("serving/server_bfs")
+    if srv is None:
+        failures.append("missing row serving/server_bfs")
+    else:
+        st = srv.get("stats") or {}
+        qps = float(st.get("qps", 0.0))
+        ok = qps >= args.min_qps
+        lines += ["", f"GraphServer: {qps:.1f} qps over "
+                      f"{st.get('requests')} requests "
+                      f"(p50 {st.get('p50_us', 0) / 1e3:.1f} ms, "
+                      f"p99 {st.get('p99_us', 0) / 1e3:.1f} ms) — "
+                      f"{'ok' if ok else '**FAIL**'}"]
+        if not ok:
+            failures.append(f"qps {qps:.2f} < floor {args.min_qps:g}")
+    _summary(lines)
+    if failures:
+        print("SERVE GATE FAILED:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    return 0
+
+
 def cmd_trend(args) -> int:
     cur = _load(args.bench)
     try:
@@ -208,6 +273,16 @@ def main() -> None:
     oc.add_argument("bench", help="BENCH_outofcore.json from this run")
     oc.add_argument("--max-ratio", type=float, default=2.0)
     oc.set_defaults(fn=cmd_ooc)
+    sv = sub.add_parser(
+        "serve", help="gate batched-serving amortization (edges/source at "
+                      "B=8 vs sequential), lane bitwise equality, and the "
+                      "GraphServer qps floor")
+    sv.add_argument("bench", help="BENCH_serving.json from this run")
+    sv.add_argument("--max-frac", type=float, default=0.5,
+                    help="batched/sequential edges-per-source ceiling")
+    sv.add_argument("--min-qps", type=float, default=5.0)
+    sv.add_argument("--algos", default="bfs,sssp")
+    sv.set_defaults(fn=cmd_serve)
     tr = sub.add_parser("trend", help="diff against a previous run's json")
     tr.add_argument("bench", help="BENCH_scaling.json from this run")
     tr.add_argument("prev", help="BENCH_scaling.json from the previous run")

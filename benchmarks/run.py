@@ -16,6 +16,7 @@ instead of throwing the numbers away with the process.
   vs_cluster   Fig 11/§6.3  single machine vs BSP cluster engine
   comm_volume  §CVC         CVC vs full-mesh reduction volume, 1-8 devices
   outofcore    §Thesis      streamed shards vs all-resident pool (tiered)
+  serving      §Serving     multi-source batched queries: amortization + QPS
   kernels      —            Pallas kernel µs/call
   roofline     §Roofline    reads experiments/dryrun/*.json
 """
@@ -27,7 +28,7 @@ import traceback
 
 from . import (algo_classes, common, comm_volume, frameworks, granularity,
                kernels_bench, memtier, outofcore, placement, roofline,
-               scaling, vs_cluster)
+               scaling, serving, vs_cluster)
 
 SUITES = {
     "memtier": memtier,
@@ -39,6 +40,7 @@ SUITES = {
     "vs_cluster": vs_cluster,
     "comm_volume": comm_volume,
     "outofcore": outofcore,
+    "serving": serving,
     "kernels": kernels_bench,
     "roofline": roofline,
 }

@@ -1,0 +1,113 @@
+"""Multi-source batched query serving — amortization + QPS/latency rows.
+
+The serving thesis (core/multisource.py): B concurrent queries on one
+resident graph share every edge sweep, so the amortized per-source edge
+cost must undercut the sequential per-source cost by ≥2× at B=8 — the
+same few-big-fetches economics the paper applies to memory traffic,
+applied to query batching.  Three row families, all on one deterministic
+rmat graph:
+
+* ``serving/seq_<algo>``          — 8 per-source ``*_dd_sparse`` runs,
+  timed end to end; ``edges_per_source`` is the sequential baseline.
+* ``serving/batched_<algo>_b8``   — one ``ms_<algo>`` run over the same 8
+  sources; its sweep-once ledger gives the amortized ``edges_per_source``
+  and ``bitwise_equal`` records lane-vs-per-source equality (checked
+  here, not assumed).  ``ci_gate.py serve`` enforces the ≤0.5× ratio.
+* ``serving/server_<algo>``       — the GraphServer scheduler
+  (launch/graph_serve.py) over 16 ragged-arrival requests on 8 slots:
+  QPS plus p50/p99 enqueue→completion latency from per-request stamps.
+  The server is warmed on an identical request set first so the timed
+  pass measures serving, not tracing.
+
+The batched row's wall-clock includes a full per-call retrace (each
+``ms_*`` call builds a fresh engine with per-round dispatch), so the
+wall-clock serving story is the warmed ``server_*`` row; the gated
+quantities are ``edges_per_source`` and the server's ``qps``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from .common import row, time_call
+
+N_SOURCES = 8
+N_REQUESTS = 16
+
+
+def _percentile(xs, q):
+    return float(np.percentile(np.asarray(xs), q))
+
+
+def run():
+    from repro.core import from_coo
+    from repro.core import multisource as ms
+    from repro.core.algorithms import bfs, sssp
+    from repro.graphs import generators as gen
+    from repro.launch.graph_serve import GraphServer, QueryRequest
+
+    src, dst, n = gen.rmat(10, 12, seed=7)
+    w = gen.random_weights(len(src), seed=8)
+    g = from_coo(src, dst, n, w, block_size=128)
+    rng = np.random.default_rng(3)
+    sources = [int(s) for s in rng.integers(0, n, N_SOURCES)]
+    rows = []
+
+    algos = {
+        "bfs": (bfs.bfs_dd_sparse, ms.ms_bfs),
+        "sssp": (sssp.sssp_dd_sparse, ms.ms_sssp),
+    }
+    for aname, (per_source, batched) in algos.items():
+        # -- sequential baseline: B independent sparse-ladder runs --------
+        def run_seq(per_source=per_source):
+            return [per_source(g, s) for s in sources]
+
+        seq = run_seq()
+        seq_edges = sum(st.edges_touched for _, st in seq)
+        us_seq = time_call(lambda: [r[0] for r in run_seq()])
+        seq_stats = dict(seq[0][1].as_dict(),
+                         edges_touched=seq_edges, sources=N_SOURCES,
+                         edges_per_source=seq_edges / N_SOURCES)
+        rows.append(row(f"serving/seq_{aname}", us_seq,
+                        f"b={N_SOURCES};edges_per_source="
+                        f"{seq_edges / N_SOURCES:.0f}", seq_stats))
+
+        # -- batched: one fused sweep serves every lane -------------------
+        labels, stb = batched(g, sources)
+        exact = all(
+            np.array_equal(np.asarray(labels[i]), np.asarray(seq[i][0]))
+            for i in range(N_SOURCES))
+        us_b = time_call(lambda: batched(g, sources)[0])
+        eps = stb.edges_touched / stb.sources
+        bat_stats = dict(stb.as_dict(), edges_per_source=eps,
+                         bitwise_equal=int(exact))
+        rows.append(row(f"serving/batched_{aname}_b{N_SOURCES}", us_b,
+                        f"b={N_SOURCES};edges_per_source={eps:.0f};"
+                        f"equal={int(exact)}", bat_stats))
+
+    # -- scheduler: QPS + tail latency over ragged arrivals ---------------
+    def make_requests():
+        return [QueryRequest(rid=i, source=sources[i % N_SOURCES],
+                             arrive_round=i // N_SOURCES)
+                for i in range(N_REQUESTS)]
+
+    warm = GraphServer(g, algo="bfs", max_batch=N_SOURCES)
+    warm.serve(make_requests())  # compile the rungs outside the timed pass
+    server = warm  # same engine: freed slots make it reusable
+    t0 = time.perf_counter()
+    done = server.serve(make_requests())
+    wall = time.perf_counter() - t0
+    lats = [(r.t_done - r.t_enqueue) * 1e6 for r in done]
+    qps = len(done) / wall
+    st = server.eng.stats
+    srv_stats = dict(st.as_dict(), qps=qps, requests=len(done),
+                     max_batch=N_SOURCES,
+                     p50_us=_percentile(lats, 50),
+                     p99_us=_percentile(lats, 99))
+    rows.append(row("serving/server_bfs", wall * 1e6,
+                    f"qps={qps:.2f};p50_ms={_percentile(lats, 50) / 1e3:.1f};"
+                    f"p99_ms={_percentile(lats, 99) / 1e3:.1f};"
+                    f"requests={len(done)}", srv_stats))
+    return rows

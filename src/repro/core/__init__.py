@@ -3,7 +3,7 @@
 # (sparse worklists, non-vertex operators, direction optimization) of
 # Gill et al., "Single Machine Graph Analytics on Massive Datasets Using
 # Intel Optane DC Persistent Memory" (2019) — adapted to TPU/JAX.
-from . import algorithms, engine, frontier, graph, operators  # noqa: F401
+from . import algorithms, engine, frontier, graph, multisource, operators  # noqa: F401
 from . import partition, placement, sharded, tiered  # noqa: F401
 from .graph import Graph, from_coo  # noqa: F401
 from .sharded import ShardedGraph, shard_graph  # noqa: F401

@@ -116,22 +116,52 @@ def bfs_dd_sparse(g: Graph, src: int, max_rounds: int = 100_000,
     return dist, eng.stats
 
 
+def _in_degrees(g) -> jax.Array:
+    """(n_pad,) in-degree, from the CSC mirror.  Plain graphs carry it;
+    sharded CSC mirrors don't, so count the flat in-edge destinations once
+    (padding slots hit the sentinel, which is cleared)."""
+    in_deg = getattr(g, "in_deg", None)
+    if in_deg is not None:
+        return in_deg
+    idst = getattr(g, "in_dst", None)
+    idst = g.in_src_idx if idst is None else idst.reshape(-1)
+    counted = jnp.zeros((g.n_pad,), jnp.int32).at[idst].add(1)
+    return counted.at[g.sentinel].set(0)
+
+
 def bfs_dirop(
     g: Graph, src: int, max_rounds: int = 100_000, alpha: float = 14.0, beta: float = 24.0
 ):
     """Direction-optimizing BFS (needs CSC; doubles the graph footprint,
-    exactly the memory cost the paper attributes to this class)."""
+    exactly the memory cost the paper attributes to this class).
+
+    Direction-sensitive accounting: a push round explores the frontier's
+    *out*-edges, a pull round consumes the frontier's *in*-edges, so the
+    heuristic's ``visited_edges`` accumulator charges each round by the
+    mass of the direction it actually ran (charging out-degree mass on
+    pull rounds skewed the α/β switch on asymmetric directed graphs).
+    Work accounting follows Beamer's convention: a push round costs the
+    full sweep (m — the dense push really processes every edge slot), a
+    pull round costs the in-degree mass of the still-unvisited vertices
+    (the bottom-up scan set), accumulated into ``edges_touched`` with the
+    pull-round count in ``RunStats.pull_rounds``.
+    """
     assert g.has_csc
     dist0 = _init_dist(g, src)
     mask0 = fr.dense_from_indices(jnp.array([src]), g.n_pad).mask
     total_edges = jnp.float32(g.m)
+    in_deg = _in_degrees(g)
 
     def step(state):
-        dist, mask, pull, visited_edges = state
+        dist, mask, pull, visited_edges, work, pulls = state
         fcount = jnp.sum(mask.astype(jnp.int32)).astype(jnp.float32)
-        fedges = jnp.sum(jnp.where(mask, g.out_deg, 0)).astype(jnp.float32)
+        out_mass = jnp.sum(jnp.where(mask, g.out_deg, 0)).astype(jnp.float32)
+        in_mass = jnp.sum(jnp.where(mask, in_deg, 0)).astype(jnp.float32)
         unvisited = jnp.maximum(total_edges - visited_edges, 0.0)
-        pull = ops.direction_choice(g, fedges, unvisited, fcount, pull, alpha, beta)
+        pull = ops.direction_choice(g, out_mass, unvisited, fcount, pull,
+                                    alpha, beta)
+        # the bottom-up scan set: in-edges of vertices not yet reached
+        scan_mass = jnp.sum(jnp.where(dist == INF, in_deg, 0)).astype(jnp.int32)
 
         def do_pull(_):
             return ops.pull_dense(g, dist, mask, dist, kind="min", use_weight=True)
@@ -140,17 +170,31 @@ def bfs_dirop(
             return ops.push_dense(g, dist, mask, dist, kind="min", use_weight=True)
 
         new = jax.lax.cond(pull, do_pull, do_push, None)
-        return new, ops.updated_mask(dist, new), pull, visited_edges + fedges
+        return (new, ops.updated_mask(dist, new), pull,
+                visited_edges + jnp.where(pull, in_mass, out_mass),
+                work + jnp.where(pull, scan_mass, jnp.int32(g.m)),
+                pulls + pull.astype(jnp.int32))
 
-    rounds, (dist, _, _, _) = run_dense(
+    rounds, (dist, _, _, _, work, pulls) = run_dense(
         step,
-        (dist0, mask0, jnp.bool_(False), jnp.float32(0.0)),
+        (dist0, mask0, jnp.bool_(False), jnp.float32(0.0), jnp.int32(0),
+         jnp.int32(0)),
         lambda s: jnp.any(s[1]),
         max_rounds,
     )
     stats = RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
-                     edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
+                                edges_touched=int(work),
+                                dense_rounds=int(rounds),
+                                pull_rounds=int(pulls))
     return dist, stats
+
+
+def bfs_batch(g: Graph, sources, max_rounds: int = 100_000):
+    """Multi-source BFS: B concurrent sources share every edge sweep
+    (``core/multisource.py``).  Row b is bitwise equal to
+    ``bfs_dd_sparse(g, sources[b])``'s labels."""
+    from .. import multisource as ms
+    return ms.ms_distances(g, sources, INF, max_rounds)
 
 
 VARIANTS = {

@@ -96,4 +96,56 @@ def pr_push(
     return rank, stats
 
 
+def ppr_push(
+    g: Graph,
+    src: int,
+    damping: float = 0.85,
+    tol: float = 1e-9,
+    max_iters: int = 10_000,
+):
+    """Personalized PageRank by residual push from a single source: the
+    same PR-Delta iteration as ``pr_push`` but with the whole unit of
+    initial residual on ``src`` (Andersen-Chung-Lang push, normalized).
+    This is the per-source reference the batched ``multisource.ms_ppr``
+    lanes are checked against — op for op the same computation, so lanes
+    match bitwise under ``operators.set_deterministic_add(True)``."""
+    valid = g.valid_vertex_mask()
+    outdeg = jnp.maximum(g.out_deg.astype(jnp.float32), 1.0)
+    rank0 = jnp.zeros((g.n_pad,), jnp.float32)
+    resid0 = rank0.at[src].set(1.0)
+
+    def step(state):
+        rank, resid = state
+        active = resid > tol
+        active = active.at[-1].set(False)
+        rank = rank + jnp.where(active, resid, 0.0)
+        push_val = jnp.where(active, damping * resid / outdeg, 0.0)
+        added = ops.push_dense(
+            g, push_val, active, jnp.zeros_like(resid), kind="add",
+            use_weight=False
+        )
+        resid = jnp.where(active, 0.0, resid) + added
+        return rank, resid
+
+    rounds, (rank, resid) = run_dense(
+        step, (rank0, resid0), lambda s: jnp.any(s[1] > tol), max_iters
+    )
+    rank = rank + resid
+    rank = rank / jnp.sum(rank)
+    rank = jnp.where(valid, rank, 0.0)
+    return rank, RunStats.from_graph(
+        g, relaxes=int(rounds), rounds=int(rounds),
+        edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
+
+
+def ppr_batch(g: Graph, sources, damping: float = 0.85, tol: float = 1e-9,
+              max_rounds: int = 10_000):
+    """Batched personalized PageRank over B concurrent sources
+    (``core/multisource.py``): one fused edge sweep per round serves every
+    lane.  Row b matches ``ppr_push(g, sources[b])`` (bitwise under
+    deterministic add, allclose otherwise)."""
+    from .. import multisource as ms
+    return ms.ms_ppr(g, sources, damping, tol, max_rounds)
+
+
 VARIANTS = {"pull": pr_pull, "push": pr_push}

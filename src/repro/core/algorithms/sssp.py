@@ -87,6 +87,14 @@ def sssp_dd_sparse(g: Graph, src: int, max_rounds: int = 100_000,
     return dist, eng.stats
 
 
+def sssp_batch(g: Graph, sources, max_rounds: int = 100_000):
+    """Multi-source SSSP: B concurrent sources share every edge sweep
+    (``core/multisource.py``).  Row b is bitwise equal to
+    ``sssp_dd_sparse(g, sources[b])``'s labels."""
+    from .. import multisource as ms
+    return ms.ms_distances(g, sources, INF, max_rounds)
+
+
 def sssp_delta(
     g: Graph,
     src: int,

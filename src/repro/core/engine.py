@@ -98,6 +98,13 @@ class RunStats:
     h2d_bytes: int = 0
     shards_streamed: int = 0
     buffer_hits: int = 0
+    # direction-optimizing traversal: rounds executed in the pull (CSC)
+    # direction — those are charged by in-degree scan mass, not m
+    pull_rounds: int = 0
+    # concurrent source lanes the run's sweeps were amortized over
+    # (core/multisource.py batches; 1 for every per-query engine) —
+    # edges_touched / sources is the per-source cost the serving gate keys on
+    sources: int = 1
     # execution geometry: device count and placement policy of the graph the
     # run executed on (1/"local" for an unsharded Graph)
     ndev: int = 1

@@ -191,6 +191,44 @@ def sparse_band(scalars, capacity: int, lo_cap: int, budget: int,
             & (mass_med <= sparse_cutoff))
 
 
+# ---------------------------------------------------------------------------
+# Multi-source batched frontiers (core/multisource.py)
+# ---------------------------------------------------------------------------
+# The batched frontier is a (B, n_pad) bool bit-matrix: row b is lane b's
+# dense frontier.  The ladder keys on the *union* row — one fused edge sweep
+# per round expands the union worklist, with per-lane masks restoring each
+# lane's message set — and per-lane termination is the row-wise any().
+
+
+def batched_from_sources(sources, n_pad: int) -> jax.Array:
+    """(B, n_pad) one-hot frontier bit-matrix, one source per lane."""
+    src = jnp.asarray(sources, jnp.int32)
+    b = src.shape[0]
+    fmat = jnp.zeros((b, n_pad), bool).at[jnp.arange(b), src].set(True)
+    return fmat.at[:, n_pad - 1].set(False)  # sentinel never activates
+
+
+def batched_round_scalars(g, fmat: jax.Array):
+    """Ladder scalars for one batched round, in one fused computation:
+    ``(total, ucount, umass, alive)`` —
+
+    * ``total``  Σ over lanes of frontier sizes (global termination);
+    * ``ucount`` union-frontier size — what the shared capacity rung must
+      hold (the one compaction serves every lane);
+    * ``umass``  union-frontier budget mass (``g.budget_edge_mass`` — the
+      per-shard max on a mesh, the whole mass otherwise);
+    * ``alive``  (B,) bool — per-lane termination mask.
+
+    Pure device computation; callers fetch the tuple in a single transfer
+    per round (``MultiSourceEngine.fetch``)."""
+    union = jnp.any(fmat, axis=0)
+    total = jnp.sum(fmat.astype(jnp.int32))
+    ucount = jnp.sum(union.astype(jnp.int32))
+    umass = g.budget_edge_mass(union)
+    alive = jnp.any(fmat, axis=1)
+    return total, ucount, umass, alive
+
+
 def dense_band(scalars, sparse_cutoff: int) -> jax.Array:
     """True while the host dispatcher would keep picking the dense
     fallback: frontier alive and median mass above the sparse cutoff.

@@ -300,6 +300,98 @@ def relax_batch(
                         out_init, kind, use_weight)
 
 
+def batched_push_dense(
+    g: Graph,
+    src_val: jax.Array,
+    active: jax.Array,
+    out_init: jax.Array,
+    kind: str = "min",
+    use_weight: bool = True,
+    substrate: str | None = None,
+) -> jax.Array:
+    """Multi-source ``push_dense``: relax every edge once for B lanes.
+
+    ``src_val`` / ``active`` / ``out_init`` are (B, n_pad) lane matrices
+    (row b = lane b's labels / frontier / accumulator).  The edge structure
+    is fetched ONCE per sweep and amortized across all B lanes — the
+    MS-BFS memory-traffic argument (core/multisource.py).  Per lane the
+    result is bitwise equal to ``push_dense`` on that lane's row:
+
+    * jnp     — ``batched_push_ref`` (axis-1 scatter, shared dst vector);
+    * pallas  — ``jax.vmap`` of the blocked edge-relax kernel;
+    * sharded — ``ShardedGraph.sharded_batched_push`` (lane-vmapped local
+      relax + one full-mesh reduce of the (B, n_pad) accumulator);
+    * det add — the canonical fixed-order tree, vmapped per lane.
+
+    Tiered (out-of-core) graphs are not supported: serving batches run on
+    resident or mesh-sharded graphs.
+    """
+    sub = _resolve(substrate)
+    if getattr(g, "is_tiered", False):
+        raise NotImplementedError(
+            "batched multi-source relax needs the whole CSR resident "
+            "(or mesh-sharded); the tiered streaming path is per-query")
+    sharded = getattr(g, "sharded_batched_push", None)
+    if sharded is not None:
+        if kind == "add" and _deterministic_add:
+            return g.sharded_batched_det_push(src_val, active, out_init,
+                                              use_weight)
+        return sharded(src_val, active, out_init, kind, use_weight, sub)
+    if kind == "add" and _deterministic_add:
+        return jax.vmap(
+            lambda v, a, o: gk.det_push_ref(g.src_idx, g.col_idx, g.edge_w,
+                                            v, a, o, use_weight)
+        )(src_val, active, out_init)
+    if sub == "pallas":
+        return jax.vmap(
+            lambda v, a, o: gk.edge_relax(
+                g.src_idx, g.col_idx, g.edge_w, a, v, o,
+                kind=kind, use_weight=use_weight, vertex_mask=True)
+        )(src_val, active, out_init)
+    return gk.batched_push_ref(g.src_idx, g.col_idx, g.edge_w, src_val,
+                               active, out_init, kind, use_weight)
+
+
+def batched_relax_batch(
+    batch: EdgeBatch,
+    src_val: jax.Array,
+    active: jax.Array,
+    out_init: jax.Array,
+    kind: str = "min",
+    use_weight: bool = True,
+    substrate: str | None = None,
+) -> jax.Array:
+    """Multi-source ``relax_batch``: one sparse advance (over the lanes'
+    *union* frontier) relaxed for B lanes at once.  A batch slot fires in
+    lane b iff the slot is valid AND its source vertex is active in lane
+    b's frontier row — which restores exactly lane b's message multiset,
+    so each row is bitwise equal to the single-lane sparse round.  Plain
+    ``EdgeBatch`` only (sharded batched rounds go through the dense
+    sweep)."""
+    sub = _resolve(substrate)
+    assert not hasattr(batch, "sharded_relax"), \
+        "batched sparse rounds are single-partition; sharded lanes relax dense"
+    if kind == "add" and _deterministic_add:
+        return jax.vmap(
+            lambda m, v, o: gk.det_relax_ref(batch.src, batch.dst, batch.w,
+                                             m, v, o, use_weight)
+        )(batch.valid[None, :] & active[:, batch.src], src_val, out_init)
+    if sub == "pallas":
+        return jax.vmap(
+            lambda m, v, o: gk.edge_relax(
+                batch.src, batch.dst, batch.w, m, v, o,
+                kind=kind, use_weight=use_weight, vertex_mask=False)
+        )(batch.valid[None, :] & active[:, batch.src], src_val, out_init)
+    return gk.batched_relax_ref(batch.src, batch.dst, batch.w, batch.valid,
+                                src_val, active, out_init, kind, use_weight)
+
+
+def batched_updated_mask(old: jax.Array, new: jax.Array) -> jax.Array:
+    """Per-lane ``updated_mask``: (B, n_pad) rows of changed labels."""
+    m = new != old
+    return m.at[:, -1].set(False)  # sentinel never activates
+
+
 def relax_edges(
     g: Graph,
     src_val: jax.Array,

@@ -467,6 +467,64 @@ class ShardedGraph:
                              self.dst, self.w, src_val, active, out_init,
                              kind, use_weight, substrate, vertex_mask=True)
 
+    def sharded_batched_push(self, src_val, active, out_init, kind,
+                             use_weight, substrate):
+        """Batched multi-source push (core/multisource.py): ``src_val`` /
+        ``active`` / ``out_init`` are (B, n_pad) lane matrices.  Each shard
+        runs its local relax vmapped over the lane axis — the edge shard is
+        fetched once for all B lanes — and the whole (B, n_pad) accumulator
+        is reduced across the mesh in one collective.
+
+        The structured reducers (cvc2d / owner1d) key on per-vertex
+        ownership of a *single* replicated label vector; like the reversed
+        push they degrade to the full-mesh reduce for batched lanes
+        (``batched_comm_per_relax`` charges that rate).  min/max/or stay
+        order-independent, so every lane is bitwise equal to the
+        single-lane sharded relax — and hence to the unsharded reference
+        (tests/test_multisource.py pins the ndev ∈ {1, 2, 4} matrix)."""
+        neutral = gk.neutral_for(kind, out_init.dtype)
+        axes = self.axes
+
+        def local(vals, msk, out0, s, d, w):
+            s, d, w = s[0], d[0], w[0]
+
+            def lane(v1, m1, o1):
+                return _local_relax(s, d, w, m1, v1,
+                                    jnp.full_like(o1, neutral), kind,
+                                    use_weight, True, substrate)
+
+            acc = jax.vmap(lane)(vals, msk, out0)
+            return _merge(out0, _cross_reduce(acc, axes, kind), kind)
+
+        fn = _shard_map(
+            local, mesh=self.mesh,
+            in_specs=(P(), P(), P(), P(axes), P(axes), P(axes)),
+            out_specs=P(), **{_SM_CHECK_KWARG: False},
+        )
+        return fn(src_val, active, out_init, self.src, self.dst, self.w)
+
+    def sharded_batched_det_push(self, src_val, active, out_init, use_weight):
+        """Deterministic batched ``add``: the canonical-order fixed tree
+        (``_det_add_flat``) vmapped over the lane axis — each lane's sum
+        associates in exactly the single-lane deterministic order, so
+        batched float results stay bitwise identical to per-lane runs
+        across every placement × ndev cell."""
+        return jax.vmap(
+            lambda v, a, o: _det_add_flat(self.src_idx, self.col_idx,
+                                          self.edge_w, v, o, use_weight,
+                                          active=a)
+        )(src_val, active, out_init)
+
+    def batched_comm_per_relax(self, lanes: int, itemsize: int = 4):
+        """Analytic (elems, bytes, hops) of ONE batched label reduction:
+        the (lanes, n_pad) accumulator crosses the mesh at the full-mesh
+        rate (the structured reducers degrade for batched lanes)."""
+        d = self.ndev
+        if d <= 1:
+            return 0, 0, 0
+        elems = d * (d - 1) * self.n_pad * lanes
+        return elems, elems * itemsize, len(self.axes)
+
     def sharded_pull_dense(self, src_val, active, out_init, kind, use_weight,
                            substrate):
         assert self.has_csc, "pull on a ShardedGraph needs shard_graph(g) " \

@@ -8,6 +8,9 @@ from .ops import advance_frontier, edge_relax, intersect_count  # noqa: F401
 from .ref import (  # noqa: F401
     KINDS,
     advance_ref,
+    batched_push_ref,
+    batched_relax_ref,
+    batched_scatter_reduce,
     det_push_ref,
     det_relax_ref,
     det_scatter_add,

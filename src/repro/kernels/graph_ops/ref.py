@@ -221,3 +221,58 @@ def relax_ref(src, dst, w, valid, src_val, out_init, kind: str = "min",
     neutral = neutral_for(kind, out_init.dtype)
     msg = jnp.where(valid, msg.astype(out_init.dtype), neutral)
     return scatter_reduce(dst, msg, out_init, kind)
+
+
+# ---------------------------------------------------------------------------
+# Multi-source (batched-lane) relaxations — core/multisource.py
+# ---------------------------------------------------------------------------
+# One shared edge-structure fetch amortized over B label lanes: the edge
+# arrays are gathered once, the per-lane values arrive as a (B, n_pad)
+# matrix, and the scatter runs on axis 1 with a shared destination vector.
+# Per lane these compute exactly what push_ref / relax_ref compute, and the
+# min/max/or reductions are order-independent, so each row is bitwise equal
+# to the corresponding single-lane call (pinned by tests/test_multisource).
+
+
+def batched_scatter_reduce(dst, msg, out, kind: str):
+    """Reduce ``msg`` (B, e) into ``out`` (B, n) at axis-1 positions ``dst``."""
+    ref = out.at[:, dst]
+    if kind == "min":
+        return ref.min(msg)
+    if kind == "max":
+        return ref.max(msg)
+    if kind == "add":
+        return ref.add(msg)
+    if kind == "or":
+        if out.dtype == bool:
+            return (out.astype(jnp.uint8)
+                    .at[:, dst].max(msg.astype(jnp.uint8)).astype(bool))
+        return ref.max(msg.astype(out.dtype))
+    raise ValueError(kind)
+
+
+def batched_push_ref(src, dst, w, src_val, active, out_init,
+                     kind: str = "min", use_weight: bool = True):
+    """Masked push over an edge list for B lanes at once.
+
+    ``src_val`` / ``active`` / ``out_init`` are (B, n_pad); the edge arrays
+    are shared across lanes (fetched once — the MS-BFS amortization)."""
+    v = src_val[:, src]                                   # (B, e)
+    msg = edge_message(v, w[None, :], kind, use_weight)
+    neutral = neutral_for(kind, out_init.dtype)
+    msg = jnp.where(active[:, src], msg.astype(out_init.dtype), neutral)
+    return batched_scatter_reduce(dst, msg, out_init, kind)
+
+
+def batched_relax_ref(src, dst, w, valid, src_val, active, out_init,
+                      kind: str = "min", use_weight: bool = True):
+    """Scatter-relax an expanded edge batch for B lanes: a slot fires in
+    lane b when the slot is valid AND its source is in lane b's frontier
+    (``active``).  The batch is expanded from the lanes' *union* frontier,
+    so the per-lane mask restores exactly lane b's message multiset."""
+    v = src_val[:, src]
+    msg = edge_message(v, w[None, :], kind, use_weight)
+    neutral = neutral_for(kind, out_init.dtype)
+    msg = jnp.where(valid[None, :] & active[:, src],
+                    msg.astype(out_init.dtype), neutral)
+    return batched_scatter_reduce(dst, msg, out_init, kind)

@@ -14,6 +14,7 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
+import warnings
 from typing import List, Optional
 
 import jax
@@ -32,6 +33,7 @@ class Request:
     slot: int = -1
     pos: int = 0
     done: bool = False
+    reject_reason: Optional[str] = None
 
 
 class Server:
@@ -49,9 +51,53 @@ class Server:
         self.free_slots = list(range(max_batch))
         self.slots: List[Optional[Request]] = [None] * max_batch
         self._decode = jax.jit(T.make_decode(cfg))
+        self._prefill = self._make_prefill()
+
+    def _make_prefill(self):
+        """One jitted dispatch per admitted prompt: ``lax.scan`` feeds the
+        prompt tokens through the masked decode step one position at a time
+        (same cache writes as the old per-token python loop, which paid one
+        device dispatch PER PROMPT TOKEN).  Retraces only per distinct
+        prompt length; slot index and mask are traced operands."""
+        decode = T.make_decode(self.cfg)
+        nb = self.max_batch
+
+        def prefill(params, cache, toks, slot, mask):
+            def body(cache, it):
+                i, tok = it
+                bt = jnp.zeros((nb, 1), jnp.int32).at[slot, 0].set(tok)
+                pos = jnp.zeros((nb,), jnp.int32).at[slot].set(i)
+                _, cache = decode(params, cache, bt, pos, mask)
+                return cache, ()
+
+            steps = (jnp.arange(toks.shape[0], dtype=jnp.int32), toks)
+            cache, _ = jax.lax.scan(body, cache, steps)
+            return cache
+
+        return jax.jit(prefill)
 
     # -- admission -----------------------------------------------------------
     def admit(self, req: Request) -> bool:
+        """Admit ``req`` into a free slot.  Returns False when no slot is
+        free (caller retries later) OR when the request can never fit —
+        the latter marks it done with ``reject_reason`` so the scheduler
+        drops it instead of scribbling past the KV cache (the old path
+        admitted oversized prompts, silently dropped the out-of-range
+        cache writes, and "served" garbage)."""
+        n_prompt = len(req.prompt)
+        if n_prompt >= self.max_seq:
+            req.done = True
+            req.reject_reason = (
+                f"prompt length {n_prompt} cannot fit: max_seq={self.max_seq} "
+                f"leaves no room to generate")
+            return False
+        room = self.max_seq - n_prompt
+        if req.max_new > room:
+            warnings.warn(
+                f"request {req.rid}: max_new={req.max_new} overflows "
+                f"max_seq={self.max_seq} with prompt length {n_prompt}; "
+                f"clamped to {room}")
+            req.max_new = room
         if not self.free_slots:
             return False
         slot = self.free_slots.pop()
@@ -62,13 +108,13 @@ class Server:
         # prompt token and yields the first generated token — so no token is
         # ever double-written (tests/test_serving.py proves scheduler ≡
         # isolated decoding)
-        mask = jnp.zeros((self.max_batch,), bool).at[slot].set(True)
-        for i, tok in enumerate(req.prompt[:-1]):
-            toks = jnp.zeros((self.max_batch, 1), jnp.int32).at[slot, 0].set(tok)
-            pos = jnp.zeros((self.max_batch,), jnp.int32).at[slot].set(i)
-            _, self.cache = self._decode(
-                self.params, self.cache, toks, pos, mask)
-        req.pos = len(req.prompt) - 1
+        if n_prompt > 1:
+            mask = jnp.zeros((self.max_batch,), bool).at[slot].set(True)
+            self.cache = self._prefill(
+                self.params, self.cache,
+                jnp.asarray(req.prompt[:-1], jnp.int32),
+                jnp.int32(slot), mask)
+        req.pos = n_prompt - 1
         return True
 
     # -- one decode tick for every active slot -------------------------------
@@ -99,13 +145,16 @@ class Server:
 
     def serve(self, requests: List[Request]):
         pending = list(requests)
-        done: List[Request] = []
         while pending or any(s is not None for s in self.slots):
-            while pending and self.free_slots:
-                self.admit(pending.pop(0))
+            while pending:
+                req = pending.pop(0)
+                if not self.admit(req) and not req.done:
+                    # no free slot yet — keep FIFO order and retry next tick
+                    # (a rejected request is done and simply dropped here)
+                    pending.insert(0, req)
+                    break
             self.tick()
-            done = [r for r in requests if r.done]
-        return done
+        return [r for r in requests if r.done]
 
 
 def main():
@@ -121,8 +170,12 @@ def main():
                     max_new=args.max_new) for i in range(args.requests)]
     out = server.serve(reqs)
     for r in out:
-        print(f"req {r.rid}: prompt {r.prompt} -> {r.out}")
-    assert all(len(r.out) == args.max_new for r in out)
+        tail = f"REJECTED ({r.reject_reason})" if r.reject_reason else r.out
+        print(f"req {r.rid}: prompt {r.prompt} -> {tail}")
+    # max_new may have been clamped at admission; rejected requests carry
+    # a reason and no output
+    assert all(len(r.out) == r.max_new
+               for r in out if r.reject_reason is None)
     print("SERVE_OK")
 
 

@@ -107,6 +107,65 @@ def test_bfs_dirop_forced_pull_directed(gname):
     assert stats.rounds > 0
 
 
+def test_bfs_dirop_direction_sensitive_accounting():
+    """Pin the dirop switch schedule and work ledger on a fixed asymmetric
+    fan-out/fan-in graph (0 → 8 hubs → 20 shared leaves → 1 sink), replayed
+    edge-for-edge in numpy.  The bugfix under test: a pull round charges
+    the heuristic's ``visited_edges`` by the frontier's IN-degree mass and
+    ``edges_touched`` by the bottom-up scan set (in-degree mass of
+    still-unvisited vertices) — the old path charged out-degree mass and
+    ``rounds·m`` regardless of direction, which on this graph reports 752
+    instead of 576 and skews the α/β switch on asymmetric digraphs."""
+    hubs = np.arange(1, 9)
+    leaves = np.arange(9, 29)
+    src = np.concatenate([np.zeros(8, np.int64), np.repeat(hubs, len(leaves)),
+                          leaves])
+    dst = np.concatenate([hubs, np.tile(leaves, len(hubs)),
+                          np.full(len(leaves), 29, np.int64)])
+    g = from_coo(src, dst, n=30, build_csc=True)
+    alpha, beta = 2.0, 4.0
+    dist, stats = bfs.bfs_dirop(g, 0, alpha=alpha, beta=beta)
+
+    # numpy replay of the step, mirroring bfs_dirop exactly
+    s = np.asarray(g.src_idx)[: g.m]
+    d = np.asarray(g.col_idx)[: g.m]
+    out_deg = np.asarray(g.out_deg)
+    in_deg = np.zeros(g.n_pad, np.int64)
+    np.add.at(in_deg, d, 1)
+    INF = np.float32(np.finfo(np.float32).max)
+    dr = np.full(g.n_pad, INF, np.float32)
+    dr[0] = 0.0
+    mask = np.zeros(g.n_pad, bool)
+    mask[0] = True
+    pull, ve, work, dirs = False, 0.0, 0, []
+    while mask.any():
+        fcount = mask.sum()
+        out_mass = out_deg[mask].sum()
+        in_mass = in_deg[mask].sum()
+        go_pull = out_mass > max(g.m - ve, 0.0) / alpha
+        go_push = fcount < g.n / beta
+        pull = (not go_push) if pull else bool(go_pull)
+        scan_mass = in_deg[dr == INF].sum()
+        new = dr.copy()
+        for u, v in zip(s, d):
+            if mask[u]:
+                new[v] = min(new[v], dr[u] + np.float32(1.0))
+        upd = new != dr
+        upd[-1] = False
+        ve += in_mass if pull else out_mass
+        work += scan_mass if pull else g.m
+        dirs.append("pull" if pull else "push")
+        dr, mask = new, upd
+
+    assert np.array_equal(np.asarray(dist), dr)
+    # hard literals: the switch schedule and both ledgers are load-bearing
+    assert dirs == ["push", "pull", "pull", "push"]
+    assert stats.rounds == len(dirs) == 4
+    assert stats.pull_rounds == dirs.count("pull") == 2
+    assert stats.edges_touched == work == 576  # old accounting: 4·188 = 752
+    assert stats.edges_touched < stats.rounds * g.m
+
+
 @pytest.mark.parametrize("gname", ["rmat_small", "web_like", "erdos"])
 @pytest.mark.parametrize("substrate", ["jnp", "pallas"])
 def test_pull_dense_directed_oracle(gname, substrate):

@@ -46,3 +46,84 @@ def test_scheduler_matches_isolated_decoding():
     for r in done:
         ref = _reference_greedy(cfg, server.params, r.prompt, r.max_new)
         assert r.out == ref, (r.rid, r.out, ref)
+
+
+def test_admit_rejects_prompt_overflowing_cache():
+    """Admission overflow regression: a prompt that cannot fit in the KV
+    cache must be REJECTED at admit (False + reason), not silently
+    admitted.  The old path admitted it, dropped the out-of-range cache
+    writes, and returned garbage tokens — this test fails on that path."""
+    cfg = _cfg()
+    server = Server(cfg, max_batch=2, max_seq=8, seed=1)
+    rng = np.random.default_rng(2)
+    bad = Request(rid=0, prompt=list(rng.integers(1, 128, 8)), max_new=4)
+    assert server.admit(bad) is False
+    assert bad.done and bad.reject_reason is not None
+    assert bad.slot == -1 and bad.out == []
+    # no slot was consumed by the rejection
+    assert len(server.free_slots) == server.max_batch
+    # serve() drops the rejected request and still completes the rest
+    good = Request(rid=1, prompt=list(rng.integers(1, 128, 3)), max_new=4)
+    bad2 = Request(rid=2, prompt=list(rng.integers(1, 128, 9)), max_new=1)
+    done = server.serve([good, bad2])
+    assert good in done and bad2 in done
+    assert bad2.reject_reason is not None and bad2.out == []
+    assert good.reject_reason is None and len(good.out) == 4
+    ref = _reference_greedy(cfg, server.params, good.prompt, good.max_new)
+    assert good.out == ref
+
+
+def test_admit_clamps_max_new_to_cache_room():
+    """prompt + max_new > max_seq but the prompt itself fits: admission
+    clamps max_new to the remaining room (with a warning) instead of
+    letting tick() truncate positions into garbage."""
+    import warnings as W
+
+    cfg = _cfg()
+    server = Server(cfg, max_batch=1, max_seq=10, seed=2)
+    rng = np.random.default_rng(5)
+    req = Request(rid=0, prompt=list(rng.integers(1, 128, 4)), max_new=50)
+    with W.catch_warnings(record=True) as caught:
+        W.simplefilter("always")
+        done = server.serve([req])
+    assert any("clamped" in str(w.message) for w in caught)
+    (r,) = done
+    assert r.reject_reason is None
+    assert r.max_new == 6 and len(r.out) == 6  # max_seq - len(prompt)
+    ref = _reference_greedy(cfg, server.params, r.prompt, 6)
+    assert r.out == ref
+
+
+def test_prefill_is_single_dispatch(monkeypatch):
+    """Prefill dispatch regression: admitting a prompt of length L must
+    issue ONE jitted prefill call (lax.scan over the L-1 prompt tokens),
+    not L-1 separate decode dispatches — and produce identical tokens."""
+    cfg = _cfg()
+    server = Server(cfg, max_batch=2, max_seq=64, seed=3)
+    calls = {"prefill": 0, "decode": 0}
+    real_prefill, real_decode = server._prefill, server._decode
+
+    def counting_prefill(*a, **k):
+        calls["prefill"] += 1
+        return real_prefill(*a, **k)
+
+    def counting_decode(*a, **k):
+        calls["decode"] += 1
+        return real_decode(*a, **k)
+
+    monkeypatch.setattr(server, "_prefill", counting_prefill)
+    monkeypatch.setattr(server, "_decode", counting_decode)
+    rng = np.random.default_rng(9)
+    prompt = list(rng.integers(1, 128, 7))
+    req = Request(rid=0, prompt=prompt, max_new=3)
+    assert server.admit(req)
+    assert calls == {"prefill": 1, "decode": 0}  # old path: 6 decode calls
+    while not req.done:
+        server.tick()
+    assert calls["decode"] == req.max_new  # one batched step per new token
+    ref = _reference_greedy(cfg, server.params, prompt, req.max_new)
+    assert req.out == ref
+    # a single-token prompt has nothing to prefill
+    req1 = Request(rid=1, prompt=[5], max_new=2)
+    assert server.admit(req1)
+    assert calls["prefill"] == 1
