@@ -1,2 +1,3 @@
-from .manager import (CheckpointManager, load_pytree, open_graph,  # noqa: F401
+from .manager import (CheckpointManager, RunCheckpointer,  # noqa: F401
+                      latest_step, load_pytree, open_graph,
                       restore_resharded, save_graph, save_pytree)

@@ -89,7 +89,9 @@ def load_pytree(tree_like, directory: str, step: Optional[int] = None):
     """
     step = latest_step(directory) if step is None else step
     if step is None:
-        raise FileNotFoundError(f"no checkpoint in {directory}")
+        raise FileNotFoundError(
+            f"no checkpoints under {directory}: expected step_*.npz files "
+            "(directory missing, empty, or never saved to)")
     data = np.load(os.path.join(directory, f"step_{step:010d}.npz"))
     want = sorted(_flatten(tree_like).keys())
     stored = sorted(data.files)
@@ -121,6 +123,29 @@ def restore_resharded(tree_like, directory: str, shardings, step: Optional[int] 
         lambda x, s: jax.device_put(x, s), host, shardings
     )
     return placed, step
+
+
+def _rotate_dir(directory: str, keep_last: int):
+    """Keep the last ``keep_last`` ``step_*.npz`` snapshots and sweep
+    crash-leftover atomic-write staging files (``step_*.npz.tmp`` /
+    ``manifest.json.*.tmp``).  Saves serialize before writing, so any tmp
+    still present once a save has completed belongs to a previous process
+    that died mid-write."""
+    files = sorted(
+        f for f in os.listdir(directory)
+        if f.startswith("step_") and f.endswith(".npz")
+    )
+    for f in files[:-keep_last] if keep_last > 0 else files:
+        try:
+            os.remove(os.path.join(directory, f))
+        except OSError:
+            pass
+    for f in os.listdir(directory):
+        if f.endswith(".tmp"):
+            try:
+                os.remove(os.path.join(directory, f))
+            except OSError:
+                pass
 
 
 def latest_step(directory: str) -> Optional[int]:
@@ -161,25 +186,7 @@ class CheckpointManager:
         self._rotate()
 
     def _rotate(self):
-        files = sorted(
-            f for f in os.listdir(self.directory)
-            if f.startswith("step_") and f.endswith(".npz")
-        )
-        for f in files[: -self.keep_last]:
-            try:
-                os.remove(os.path.join(self.directory, f))
-            except OSError:
-                pass
-        # sweep crash-leftover atomic-write staging files
-        # (step_*.npz.tmp / manifest.json.*.tmp).  Saves serialize through
-        # wait() before writing, so any tmp still present once a save has
-        # completed belongs to a previous process that died mid-write.
-        for f in os.listdir(self.directory):
-            if f.endswith(".tmp"):
-                try:
-                    os.remove(os.path.join(self.directory, f))
-                except OSError:
-                    pass
+        _rotate_dir(self.directory, self.keep_last)
 
     def wait(self):
         if self._thread is not None and self._thread.is_alive():
@@ -198,12 +205,89 @@ class CheckpointManager:
         return latest_step(self.directory)
 
 
+class RunCheckpointer:
+    """Mid-run snapshot/resume for the streaming analytics engines.
+
+    An hours-long run over a persistent-tier graph must not restart from
+    round 0 when the host dies: every ``every`` rounds the engine hands
+    its whole iteration state here — the labels pytree, the frontier
+    mask, any auxiliary rails — and we persist it with ``save_pytree``
+    under ``step_<round>.npz`` (atomic: npz staged + replaced, manifest
+    committed last).  The round counter and a ``RunStats`` snapshot ride
+    in the manifest metadata, but the round is ALSO the step number, so
+    resume needs no manifest at all.
+
+    Resume contract (the bitwise drill in ``tests/test_chaos.py``): state
+    round-trips through ``.npz`` bit-exactly, and the engines fold shards
+    in a deterministic order, so a run killed at round r and resumed from
+    the last snapshot finishes with labels **bitwise identical** to the
+    uninterrupted run — for BFS unconditionally, for pagerank under
+    ``operators.set_deterministic_add``.
+
+    ``every`` is compared against the number of rounds since the last
+    snapshot (not ``round % every``): the fused ladder retires multi-round
+    stretches, so round counters may jump past a multiple.
+
+    ``fault`` (a ``core.faultio.FaultInjector``) ticks the ``ckpt_write``
+    site before each write — the kill-mid-checkpoint drill proving a torn
+    snapshot is never resumed from.
+    """
+
+    def __init__(self, directory: str, every: int = 8, keep_last: int = 2,
+                 resume: bool = True, fault=None):
+        if every < 1:
+            raise ValueError(f"every must be >= 1, got {every}")
+        self.directory = directory
+        self.every = int(every)
+        self.keep_last = int(keep_last)
+        self.resume = resume
+        self.fault = fault
+        self.saves = 0
+        self._last_saved = 0
+        os.makedirs(directory, exist_ok=True)
+
+    def maybe_save(self, state, round_no: int, stats=None) -> bool:
+        """Snapshot iff ``every`` or more rounds passed since the last
+        snapshot (or resume point).  Returns True when a save happened."""
+        if round_no - self._last_saved < self.every:
+            return False
+        self.save(state, round_no, stats)
+        return True
+
+    def save(self, state, round_no: int, stats=None):
+        if self.fault is not None:
+            self.fault.tick("ckpt_write", key=int(round_no))
+        host = jax.tree.map(np.asarray, state)  # device→host snapshot
+        meta = {"kind": "run-checkpoint", "round": int(round_no)}
+        if stats is not None:  # e.g. RunStats.as_dict(): ints + str tags
+            meta["stats"] = {k: (v if isinstance(v, str) else int(v))
+                             for k, v in dict(stats).items()}
+        save_pytree(host, self.directory, step=int(round_no), metadata=meta)
+        _rotate_dir(self.directory, self.keep_last)
+        self._last_saved = int(round_no)
+        self.saves += 1
+
+    def load(self, state_like):
+        """``(state, start_round)`` from the latest snapshot when
+        ``resume`` is on and one exists, else ``(state_like, 0)``.
+        Host numpy arrays — the engine re-places them on device."""
+        if not self.resume or latest_step(self.directory) is None:
+            return state_like, 0
+        state, step = load_pytree(state_like, self.directory)
+        self._last_saved = int(step)
+        return state, int(step)
+
+
 # ---------------------------------------------------------------------------
 # Persistent graph store (Metall analogue for core/tiered.py)
 # ---------------------------------------------------------------------------
 
 GRAPH_MANIFEST = "graph_manifest.json"
-_GRAPH_FORMAT = "tiered-graph-v1"
+# v2 adds per-shard integrity records (crc32 + dtype/shape) to the
+# manifest; v1 stores (no checksums) still open, just unverified
+_GRAPH_FORMAT = "tiered-graph-v2"
+_GRAPH_FORMATS = ("tiered-graph-v1", "tiered-graph-v2")
+_SHARD_DTYPES = ("int32", "int32", "float32")  # src, dst, w
 
 
 def _mmap_npz_member(path: str, name: str) -> Optional[np.ndarray]:
@@ -278,8 +362,16 @@ def save_graph(g, directory: str, nshards: int = 8) -> str:
     staged to ``*.tmp`` and ``os.replace``d, and stale tmps from a
     previous crashed save are swept first — a crash at any point leaves
     either a complete, openable store or one ``open_graph`` refuses.
+
+    The manifest records a per-shard integrity triple — CRC32 over the
+    padded (src, dst, w) bytes (``core.tiered.shard_crc``) plus the
+    dtypes and padded shape — so a store mapped for months detects
+    bit-rot at fetch time instead of silently folding garbage into
+    labels (the checksum is over what the store SHOULD hold: it is
+    computed from the in-memory arrays before they are staged to disk,
+    so a write torn under ``save_graph`` itself is also caught on read).
     """
-    from ..core.tiered import TieredGraph, tier_graph
+    from ..core.tiered import TieredGraph, shard_crc, tier_graph
 
     if not isinstance(g, TieredGraph):
         g = tier_graph(g, nshards)
@@ -290,8 +382,10 @@ def save_graph(g, directory: str, nshards: int = 8) -> str:
                 os.remove(os.path.join(directory, f))
             except OSError:
                 pass
+    crcs = []
     for sid in range(g.nshards):
         src, dst, w = g._host[sid]
+        crcs.append(shard_crc(src, dst, w))
         final = _shard_path(directory, sid)
         tmp = final + ".tmp"
         with open(tmp, "wb") as f:
@@ -309,6 +403,9 @@ def save_graph(g, directory: str, nshards: int = 8) -> str:
         "nshards": g.nshards, "epd": g.epd,
         "vtx_bounds": [int(x) for x in g.vtx_bounds],
         "shard_sizes": [int(x) for x in g.shard_sizes],
+        "shard_crcs": crcs,
+        "shard_dtypes": list(_SHARD_DTYPES),
+        "shard_shape": [g.epd],
         "time": time.time(),
     }
     mtmp = os.path.join(directory, GRAPH_MANIFEST + ".tmp")
@@ -319,17 +416,34 @@ def save_graph(g, directory: str, nshards: int = 8) -> str:
 
 
 def open_graph(directory: str, resident_shards: int = 2,
-               resident_bytes: Optional[int] = None):
+               resident_bytes: Optional[int] = None,
+               verify: str = "fetch"):
     """Open a persisted graph store as a ``TieredGraph`` whose host shards
     are memory-mapped off disk (build once, map every run after).
 
     Raises ``FileNotFoundError`` when the manifest is absent (save never
     completed — the commit record is written last) and ``ValueError`` when
     the manifest and the shard files disagree (truncated or missing
-    shards): a partial store is refused, never silently repaired.
-    """
-    from ..core.tiered import TieredGraph
+    shards): a partial store is refused, never silently repaired.  A
+    shard archive that cannot even be parsed (torn zip, truncated member)
+    raises ``ShardCorruptError`` naming the shard.
 
+    ``verify`` selects when the manifest's per-shard CRC32s are checked
+    against the mapped bytes:
+
+    * ``"fetch"`` (default) — lazily, the first time each shard actually
+      streams (``TieredGraph._fetch``).  Preserves the mmap laziness a
+      build-once store exists for: open touches no shard pages, and a
+      frontier that never visits a rotted shard never pays for it.
+    * ``"open"``  — eagerly scan every shard now; a corrupt one raises
+      ``ShardCorruptError`` before any run starts (fsck mode).
+    * ``"off"``   — trust the store (benchmarking the verify cost).
+    """
+    from ..core.faultio import ShardCorruptError
+    from ..core.tiered import TieredGraph, shard_crc
+
+    if verify not in ("fetch", "open", "off"):
+        raise ValueError(f"verify must be fetch|open|off, got {verify!r}")
     mpath = os.path.join(directory, GRAPH_MANIFEST)
     if not os.path.exists(mpath):
         raise FileNotFoundError(
@@ -337,9 +451,11 @@ def open_graph(directory: str, resident_shards: int = 2,
             "store or a save crashed before committing; re-run save_graph")
     with open(mpath) as f:
         man = json.load(f)
-    if man.get("format") != _GRAPH_FORMAT:
+    if man.get("format") not in _GRAPH_FORMATS:
         raise ValueError(f"unknown graph store format {man.get('format')!r}")
     nshards, epd = int(man["nshards"]), int(man["epd"])
+    crcs = man.get("shard_crcs")  # absent on v1 stores → unverified
+    dtypes = tuple(man.get("shard_dtypes", _SHARD_DTYPES))
     shards = []
     for sid in range(nshards):
         path = _shard_path(directory, sid)
@@ -347,11 +463,30 @@ def open_graph(directory: str, resident_shards: int = 2,
             raise ValueError(
                 f"graph store {directory} is incomplete: manifest promises "
                 f"{nshards} shards but {os.path.basename(path)} is missing")
-        src, dst, w = _load_shard_arrays(path)
+        try:
+            src, dst, w = _load_shard_arrays(path)
+        except Exception as e:  # zip/npy parse failures → typed, named
+            raise ShardCorruptError(
+                f"graph store {directory} shard {sid} is unreadable "
+                f"({type(e).__name__}: {e}) — torn or truncated write; "
+                "restore the shard or re-run save_graph") from e
         if not (src.shape == dst.shape == w.shape == (epd,)):
             raise ValueError(
                 f"graph store {directory} shard {sid} has shape "
                 f"{src.shape}/{dst.shape}/{w.shape}, manifest says ({epd},)")
+        got_dt = (str(src.dtype), str(dst.dtype), str(w.dtype))
+        if got_dt != dtypes:
+            raise ValueError(
+                f"graph store {directory} shard {sid} has dtypes {got_dt}, "
+                f"manifest says {dtypes}")
+        if verify == "open" and crcs is not None:
+            got = shard_crc(src, dst, w)
+            if got != int(crcs[sid]):
+                raise ShardCorruptError(
+                    f"graph store {directory} shard {sid}: crc32 "
+                    f"{got:#010x} != manifest {int(crcs[sid]):#010x} — "
+                    "bit-rot or torn write; restore from a replica or "
+                    "re-run save_graph")
         shards.append((src, dst, w))
     out_deg = np.load(os.path.join(directory, "vertices.npz"))["out_deg"]
     if resident_bytes is not None:
@@ -363,4 +498,5 @@ def open_graph(directory: str, resident_shards: int = 2,
         shard_sizes=np.asarray(man["shard_sizes"], np.int64),
         host_shards=shards, out_deg=out_deg,
         resident_shards=resident_shards,
+        shard_crcs=crcs, verify_checksums=(verify != "off"),
     )

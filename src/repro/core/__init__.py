@@ -3,8 +3,11 @@
 # (sparse worklists, non-vertex operators, direction optimization) of
 # Gill et al., "Single Machine Graph Analytics on Massive Datasets Using
 # Intel Optane DC Persistent Memory" (2019) — adapted to TPU/JAX.
-from . import algorithms, engine, frontier, graph, multisource, operators  # noqa: F401
-from . import partition, placement, sharded, tiered  # noqa: F401
+from . import algorithms, engine, faultio, frontier, graph  # noqa: F401
+from . import multisource, operators, partition, placement  # noqa: F401
+from . import sharded, tiered  # noqa: F401
+from .faultio import (FaultInjector, FaultSpec, InjectedIOError,  # noqa: F401
+                      ShardCorruptError)
 from .graph import Graph, from_coo  # noqa: F401
 from .sharded import ShardedGraph, shard_graph  # noqa: F401
 from .tiered import TieredGraph, tier_graph  # noqa: F401

@@ -104,15 +104,18 @@ def _dense_step(g, dist, mask):
 
 
 def bfs_dd_sparse(g: Graph, src: int, max_rounds: int = 100_000,
-                  fused: bool = True):
+                  fused: bool = True, checkpointer=None):
     """Data-driven over the sparse-worklist ladder (the paper's Galois
     class).  ``fused`` selects device-resident rung stretches (default) vs
     one host dispatch per round — identical labels and RunStats either
-    way."""
+    way.  ``checkpointer`` (a ``checkpoint.RunCheckpointer``) snapshots
+    the (dist, frontier) state every K rounds and resumes an interrupted
+    run bitwise (the labels are a pure function of the state at any
+    round boundary)."""
     dist0 = _init_dist(g, src)
     mask0 = fr.dense_from_indices(jnp.array([src]), g.n_pad).mask
     eng = SparseLadderEngine(g, _sparse_step, _dense_step, fused=fused)
-    dist, _ = eng.run(dist0, mask0, max_rounds)
+    dist, _ = eng.run(dist0, mask0, max_rounds, checkpointer=checkpointer)
     return dist, eng.stats
 
 

@@ -54,11 +54,17 @@ def pr_push(
     damping: float = 0.85,
     tol: float = 1e-9,
     max_iters: int = 10_000,
+    checkpointer=None,
 ):
     """Residual push PageRank (un-normalised PPR-style formulation).
 
     rank converges to the solution of  r = (1-d)·1 + d·Aᵀ D⁻¹ r   (scaled by n
     vs the pull variant; we normalise at the end to match ``pr_pull``).
+
+    ``checkpointer`` snapshots the (rank, residual) pair every K rounds on
+    the tiered path and resumes an interrupted run — bitwise under
+    ``operators.set_deterministic_add(True)`` (float add order is fixed),
+    allclose otherwise.
     """
     valid = g.valid_vertex_mask()
     outdeg = jnp.maximum(g.out_deg.astype(jnp.float32), 1.0)
@@ -78,13 +84,18 @@ def pr_push(
 
     # a tiered graph streams edge shards from host state inside the step,
     # so rounds dispatch eagerly (run_host) and the edge / h2d accounting
-    # comes from the graph's stream counters instead of rounds·m
+    # comes from the graph's stream counters instead of rounds·m; the
+    # eager path also carries the crash-recovery hooks (checkpointer +
+    # the graph's attached fault injector)
     tiered = getattr(g, "is_tiered", False)
     io0 = g.io.snapshot() if tiered else None
-    runner = run_host if tiered else run_dense
-    rounds, (rank, resid) = runner(
-        step, (rank0, resid0), lambda s: jnp.any(s[1] > tol), max_iters
-    )
+    if tiered:
+        rounds, (rank, resid) = run_host(
+            step, (rank0, resid0), lambda s: jnp.any(s[1] > tol), max_iters,
+            checkpointer=checkpointer, fault=getattr(g, "fault", None))
+    else:
+        rounds, (rank, resid) = run_dense(
+            step, (rank0, resid0), lambda s: jnp.any(s[1] > tol), max_iters)
     rank = rank + resid  # fold in the leftover residual
     rank = jnp.where(valid, rank / jnp.sum(rank), 0.0)
     stats = RunStats.from_graph(

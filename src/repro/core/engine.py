@@ -98,6 +98,13 @@ class RunStats:
     h2d_bytes: int = 0
     shards_streamed: int = 0
     buffer_hits: int = 0
+    # fault-tolerance ledger of the streamed path (StreamIO.fold_delta):
+    # reads retried through the tiered RetryPolicy, checksum mismatches
+    # observed (healed on retry or raised as ShardCorruptError), and wall
+    # time the fetch miss path spent (read + verify + H2D issue + backoff)
+    io_retries: int = 0
+    checksum_failures: int = 0
+    io_wait_us: int = 0
     # direction-optimizing traversal: rounds executed in the pull (CSC)
     # direction — those are charged by in-degree scan mass, not m
     pull_rounds: int = 0
@@ -167,11 +174,29 @@ def run_dense(
     return rounds, out
 
 
+def resume_run(checkpointer, state_like):
+    """``(state, start_round)`` for a run that may be resuming: the
+    checkpointer's latest snapshot re-placed on device, or the caller's
+    fresh ``state_like`` and round 0.  The returned round is the round the
+    snapshot was taken AFTER — the engine executes rounds
+    ``start_round..max_rounds`` and, because the fold order is
+    deterministic, finishes bitwise identical to the uninterrupted run
+    (``tests/test_chaos.py`` kills a subprocess mid-run to prove it)."""
+    if checkpointer is None:
+        return state_like, 0
+    state, start = checkpointer.load(state_like)
+    if start:
+        state = jax.device_put(state)
+    return state, start
+
+
 def run_host(
     step: Callable,
     state,
     cond: Callable,
     max_rounds: int,
+    checkpointer=None,
+    fault=None,
 ):
     """Eager counterpart of ``run_dense`` for graphs whose relaxation
     cannot be traced into a while_loop — the tiered out-of-core path
@@ -179,11 +204,24 @@ def run_host(
     pool inside each step, so rounds dispatch from Python with one
     blocking ``cond`` fetch per round (the streamed regime pays per-round
     syncs; what it buys is edges never resident).  Same
-    ``(rounds, state)`` contract as ``run_dense``."""
-    rounds = 0
+    ``(rounds, state)`` contract as ``run_dense``.
+
+    Because rounds dispatch from Python anyway, this is also the regime
+    where mid-run fault tolerance is free to bolt on: ``checkpointer`` (a
+    ``checkpoint.RunCheckpointer``) resumes from its latest snapshot and
+    snapshots ``state`` every ``every`` rounds; ``fault`` (a
+    ``core.faultio.FaultInjector``) ticks the ``"round"`` site per round
+    so chaos drills can kill/delay a run at an exact round.
+    ``max_rounds`` is the TOTAL run budget — a run resumed at round r
+    executes at most ``max_rounds - r`` more."""
+    state, rounds = resume_run(checkpointer, state)
     while rounds < max_rounds and bool(cond(state)):
+        if fault is not None:
+            fault.tick("round", key=rounds)
         state = step(state)
         rounds += 1
+        if checkpointer is not None:
+            checkpointer.maybe_save(state, rounds)
     return rounds, state
 
 
@@ -357,16 +395,22 @@ class SparseLadderEngine:
         return self._dense
 
 
-    def run(self, labels, mask, max_rounds: int = 10_000):
+    def run(self, labels, mask, max_rounds: int = 10_000, checkpointer=None):
+        # ``checkpointer`` (checkpoint.RunCheckpointer): resume from its
+        # latest snapshot and snapshot (labels, mask) every ``every``
+        # rounds; ``max_rounds`` stays the TOTAL run budget across
+        # interruptions.  Works in all three regimes — the fused path
+        # snapshots at stretch boundaries (its only host syncs).
         if getattr(self.g, "is_tiered", False):
-            return self._run_streamed(labels, mask, max_rounds)
+            return self._run_streamed(labels, mask, max_rounds, checkpointer)
         if self.fused:
-            return self._run_fused(labels, mask, max_rounds)
-        return self._run_per_round(labels, mask, max_rounds)
+            return self._run_fused(labels, mask, max_rounds, checkpointer)
+        return self._run_per_round(labels, mask, max_rounds, checkpointer)
 
     # ---- streamed dispatch (out-of-core tiered graphs) -----------------
 
-    def _run_streamed(self, labels, mask, max_rounds: int):
+    def _run_streamed(self, labels, mask, max_rounds: int,
+                      checkpointer=None):
         """Per-round dispatch for a ``tiered.TieredGraph`` — the engine's
         resident-budget path: the CSR lives behind a bounded pool of
         device shard buffers, so steps cannot fuse into device-resident
@@ -379,14 +423,24 @@ class SparseLadderEngine:
         sparse (shard-granular work-efficiency ⇒ bandwidth-efficiency);
         rounds touching every shard count as dense.  Stream deltas fold
         into ``h2d_bytes`` / ``shards_streamed`` / ``buffer_hits`` /
-        ``edges_touched`` at the end."""
+        ``edges_touched`` at the end.
+
+        This is also the crash-recovery regime (the paper's months-lived
+        persistent store): ``checkpointer`` snapshots ``(labels, mask)``
+        every K rounds and resumes bitwise, and the graph's attached
+        ``FaultInjector`` ticks the ``"round"`` site here so kill drills
+        land at an exact round."""
         g = self.g
         self.stats.substrate = ops.get_substrate()
         io0 = g.io.snapshot()
-        for _ in range(max_rounds):
+        fault = getattr(g, "fault", None)
+        (labels, mask), rnd = resume_run(checkpointer, (labels, mask))
+        while rnd < max_rounds:
             count, live = jax.device_get(g.round_live(mask))
             if int(count) == 0:
                 break
+            if fault is not None:
+                fault.tick("round", key=rnd)
             self.stats.rounds += 1
             if int(live.sum()) < g.nshards:
                 self.stats.sparse_rounds += 1
@@ -394,6 +448,10 @@ class SparseLadderEngine:
                 self.stats.dense_rounds += 1
             g.set_live_hint(live)
             labels, mask = self._dense_fn(g, labels, mask)
+            rnd += 1
+            if checkpointer is not None:
+                checkpointer.maybe_save((labels, mask), rnd,
+                                        self.stats.as_dict())
         g.io.fold_delta(self.stats, io0)
         return labels, mask
 
@@ -426,16 +484,17 @@ class SparseLadderEngine:
             self.stats.edges_touched += budget * (k * ndev - esc) + epd * esc
             self.stats.add_comm(g, relaxes=k, scalar_collectives=k)
 
-    def _run_fused(self, labels, mask, max_rounds: int):
+    def _run_fused(self, labels, mask, max_rounds: int, checkpointer=None):
         g = self.g
         sub = ops.get_substrate()
         det = ops.get_deterministic_add()
         self.stats.substrate = sub
         sparse_cutoff = self.budget_ladder[-1] // 2
+        (labels, mask), round_no = resume_run(checkpointer, (labels, mask))
         scalars = _round_scalars(g, mask)
         pending = None  # (regime, budget) of the stretch in flight
         counters = None
-        rounds_left = max_rounds
+        rounds_left = max_rounds - round_no
         while True:
             # ONE blocking fetch per stretch: the in-flight stretch's
             # counters and the next round's ladder scalars come back in a
@@ -450,7 +509,15 @@ class SparseLadderEngine:
                 k, esc, dmass = (int(x) for x in cnt)
                 self._settle_stretch(pending[0], pending[1], k, esc, dmass)
                 rounds_left -= k
+                round_no += k
                 pending = None
+                # snapshot at the stretch boundary — the fused path's only
+                # host sync, so checkpointing adds no extra round-trips
+                # (rounds covered by one stretch may jump past a multiple
+                # of ``every``; maybe_save's since-last rule handles it)
+                if checkpointer is not None:
+                    checkpointer.maybe_save((labels, mask), round_no,
+                                            self.stats.as_dict())
             if count == 0 or rounds_left <= 0:
                 break
             cap = fr.pick_capacity(max(cap_need, 1), self.cap_ladder)
@@ -491,7 +558,8 @@ class SparseLadderEngine:
 
     # ---- per-round dispatch (the measurable baseline) ------------------
 
-    def _run_per_round(self, labels, mask, max_rounds: int):
+    def _run_per_round(self, labels, mask, max_rounds: int,
+                       checkpointer=None):
         g = self.g
         # cached steps were pinned to the (substrate, deterministic-add)
         # mode active when they were jitted; if the engine-wide selection
@@ -507,7 +575,8 @@ class SparseLadderEngine:
         epd = getattr(g, "epd", g.m_pad)
         # max sparse budget: don't bother with sparse when it costs ~ dense
         sparse_cutoff = self.budget_ladder[-1] // 2
-        for _ in range(max_rounds):
+        (labels, mask), rnd = resume_run(checkpointer, (labels, mask))
+        while rnd < max_rounds:
             count, cap_need, mass_med, mass_tot = (
                 int(x) for x in jax.device_get(_round_scalars(g, mask)))
             if count == 0:
@@ -543,4 +612,8 @@ class SparseLadderEngine:
                 self.stats.sparse_rounds += 1
                 self.stats.edges_touched += budget * (ndev - esc) + epd * esc
                 self.stats.add_comm(g, relaxes=1, scalar_collectives=1)
+            rnd += 1
+            if checkpointer is not None:
+                checkpointer.maybe_save((labels, mask), rnd,
+                                        self.stats.as_dict())
         return labels, mask

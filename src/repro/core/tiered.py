@@ -55,6 +55,8 @@ partition-order note; ``tests/test_tiered.py`` pins both claims).
 from __future__ import annotations
 
 import dataclasses
+import time
+import zlib
 from collections import OrderedDict
 from functools import partial
 from typing import Optional, Sequence, Tuple
@@ -63,8 +65,20 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..distributed.fault import RetryPolicy
 from ..kernels import graph_ops as gk
+from .faultio import FaultInjector, ShardCorruptError
 from .graph import Graph, round_up, shard_ranges
+
+
+def shard_crc(src: np.ndarray, dst: np.ndarray, w: np.ndarray) -> int:
+    """CRC32 of one padded shard's (src, dst, w) triple — the checksum
+    unit ``checkpoint.save_graph`` records per shard and ``_fetch``
+    re-derives on every miss (chained over the three arrays in order, so
+    a value that migrated between arrays cannot cancel out)."""
+    c = zlib.crc32(np.ascontiguousarray(src))
+    c = zlib.crc32(np.ascontiguousarray(dst), c)
+    return zlib.crc32(np.ascontiguousarray(w), c)
 
 
 @dataclasses.dataclass
@@ -76,17 +90,29 @@ class StreamIO:
     shards_streamed: int = 0
     buffer_hits: int = 0
     edges_relaxed: int = 0  # edge slots processed (epd per scheduled shard)
+    # fault-tolerance ledger: reads retried through the RetryPolicy,
+    # checksum mismatches observed (every one either healed on retry or
+    # became a ShardCorruptError), and wall time the fetch path spent on
+    # misses — host read + verify + H2D issue + retry backoff, the
+    # latency a fault plan's delay spikes land in
+    io_retries: int = 0
+    checksum_failures: int = 0
+    io_wait_us: int = 0
 
-    def snapshot(self) -> Tuple[int, int, int, int]:
+    def snapshot(self) -> Tuple[int, ...]:
         return (self.h2d_bytes, self.shards_streamed, self.buffer_hits,
-                self.edges_relaxed)
+                self.edges_relaxed, self.io_retries, self.checksum_failures,
+                self.io_wait_us)
 
-    def fold_delta(self, stats, before: Tuple[int, int, int, int]) -> None:
+    def fold_delta(self, stats, before: Tuple[int, ...]) -> None:
         """Add the counters accumulated since ``before`` into a RunStats."""
         stats.h2d_bytes += self.h2d_bytes - before[0]
         stats.shards_streamed += self.shards_streamed - before[1]
         stats.buffer_hits += self.buffer_hits - before[2]
         stats.edges_touched += self.edges_relaxed - before[3]
+        stats.io_retries += self.io_retries - before[4]
+        stats.checksum_failures += self.checksum_failures - before[5]
+        stats.io_wait_us += self.io_wait_us - before[6]
 
 
 @partial(jax.jit, static_argnames=("kind", "use_weight", "sub", "det",
@@ -151,6 +177,8 @@ class TieredGraph:
         host_shards: Sequence[Tuple[np.ndarray, np.ndarray, np.ndarray]],
         out_deg: np.ndarray,
         resident_shards: int,
+        shard_crcs: Optional[Sequence[int]] = None,
+        verify_checksums: bool = True,
     ):
         if resident_shards < 2:
             raise ValueError(
@@ -166,6 +194,16 @@ class TieredGraph:
         self.vtx_bounds = np.asarray(vtx_bounds, np.int64)
         self.shard_sizes = np.asarray(shard_sizes, np.int64)
         self._host = list(host_shards)
+        # integrity + recovery: per-shard CRC32s (from the cut or the
+        # store manifest) verified on every miss when present; a read
+        # that keeps failing after ``retry``'s budget raises
+        # ShardCorruptError.  ``fault`` is the test-only injector.
+        self.shard_crcs = (None if shard_crcs is None
+                           else [int(c) for c in shard_crcs])
+        self.verify_checksums = bool(verify_checksums)
+        self.retry = RetryPolicy(max_retries=2, base_delay_s=0.01,
+                                 retryable=(OSError, ShardCorruptError))
+        self.fault: Optional[FaultInjector] = None
         # vertex tier: O(n) arrays stay device-resident for the whole run
         self.out_deg = jnp.asarray(np.asarray(out_deg, np.int32))
         owner = np.searchsorted(self.vtx_bounds, np.arange(n_pad),
@@ -226,6 +264,33 @@ class TieredGraph:
         length ``nshards``); consumed by exactly one ``tiered_push_dense``."""
         self._live_hint = np.asarray(live)
 
+    def set_fault_injector(self, fault: Optional[FaultInjector]) -> None:
+        """Attach a :class:`core.faultio.FaultInjector` whose plan fires
+        on this graph's ``shard_read`` site (and, via the engine, on its
+        ``round`` site).  Test/chaos-drill only — ``None`` detaches."""
+        self.fault = fault
+
+    def _read_shard(self, sid: int):
+        """One read attempt of shard ``sid``'s host arrays: fault
+        injection first (may raise InjectedIOError / sleep / kill), then
+        checksum verification against the recorded CRC.  Raises
+        ShardCorruptError on mismatch — the retry policy re-invokes this
+        whole attempt, so transient read corruption heals and persistent
+        corruption keeps failing until the typed error escapes."""
+        s, d, w = self._host[sid]
+        if self.fault is not None:
+            s, d, w = self.fault.shard_read(sid, s, d, w)
+        if self.verify_checksums and self.shard_crcs is not None:
+            got = shard_crc(s, d, w)
+            want = self.shard_crcs[sid]
+            if got != want:
+                self.io.checksum_failures += 1
+                raise ShardCorruptError(
+                    f"shard {sid}: crc32 {got:#010x} != recorded "
+                    f"{want:#010x} — bit-rot, a torn write, or a store "
+                    "mixed from two cuts; rebuild with save_graph")
+        return s, d, w
+
     def _fetch(self, sid: int):
         """Device buffer of shard ``sid``; a pool hit costs zero bytes, a
         miss streams the shard (async H2D), evicting LRU shards beyond the
@@ -234,18 +299,35 @@ class TieredGraph:
         shards scheduled — a hit is judged at fetch time, AFTER this
         relax's own earlier prefetches may have evicted it (a pool smaller
         than the round's schedule really does restream, and the counters
-        must say so)."""
+        must say so).
+
+        The miss path is the recovery boundary: the host read + checksum
+        verify runs under ``self.retry`` (``io_retries`` counts the
+        re-reads), and only a read that survived verification is ever
+        device_put — a corrupt shard raises :class:`ShardCorruptError`
+        out of the relax instead of folding garbage into labels.  The
+        counters stay exact under retries: one successful miss charges
+        exactly one ``shard_bytes``, however many attempts it took."""
         pool = self._pool
         if sid in pool:
             pool.move_to_end(sid)
             self.io.buffer_hits += 1
             return pool[sid]
+        t0 = time.perf_counter()
         while len(pool) >= self.resident_shards:
             pool.popitem(last=False)
-        s, d, w = self._host[sid]
-        # one async H2D per array: jax.device_put returns immediately, so
-        # the copy overlaps the previous shard's relax dispatch
-        buf = (jax.device_put(s), jax.device_put(d), jax.device_put(w))
+
+        def count_retry(attempt, delay_s, exc):
+            self.io.io_retries += 1
+
+        try:
+            s, d, w = self.retry.run(self._read_shard, sid,
+                                     on_retry=count_retry)
+            # one async H2D per array: jax.device_put returns immediately,
+            # so the copy overlaps the previous shard's relax dispatch
+            buf = (jax.device_put(s), jax.device_put(d), jax.device_put(w))
+        finally:
+            self.io.io_wait_us += int((time.perf_counter() - t0) * 1e6)
         pool[sid] = buf
         self.io.shards_streamed += 1
         self.io.h2d_bytes += self.shard_bytes
@@ -335,4 +417,5 @@ def tier_graph(
         nshards=nshards, epd=epd, vtx_bounds=vtx, shard_sizes=sizes,
         host_shards=shards, out_deg=np.asarray(g.out_deg),
         resident_shards=resident_shards,
+        shard_crcs=[shard_crc(*sh) for sh in shards],
     )

@@ -1,2 +1,3 @@
 from .mesh_utils import axis_size, flat_devices, spec  # noqa: F401
-from .fault import StragglerMonitor, ElasticPolicy  # noqa: F401
+from .fault import (AttemptTimeout, ElasticPolicy, RetryPolicy,  # noqa: F401
+                    StragglerMonitor)

@@ -16,10 +16,12 @@ The policies are deliberately simple and testable:
 
 from __future__ import annotations
 
+import concurrent.futures
 import dataclasses
+import random
 import statistics
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
 
 @dataclasses.dataclass
@@ -73,21 +75,81 @@ class ElasticPolicy:
         raise RuntimeError("no devices available")
 
 
+class AttemptTimeout(TimeoutError):
+    """One attempt exceeded the policy's per-attempt ``timeout_s``."""
+
+
 @dataclasses.dataclass
 class RetryPolicy:
-    """Transient-failure retry with exponential backoff (launcher level)."""
+    """Transient-failure retry with exponential backoff (launcher level,
+    and the read-retry engine of ``core/tiered.py``'s shard fetch).
+
+    * ``retryable`` — only these exception types are retried; anything
+      else (including ``KeyboardInterrupt``/``SystemExit``, which are not
+      ``Exception`` subclasses) propagates immediately.  A checksum
+      mismatch is retryable on purpose: a transient read glitch heals on
+      re-read, real bit-rot fails every attempt and surfaces as the typed
+      error after the budget is spent.
+    * ``jitter`` — fraction of each delay added uniformly at random
+      (seeded, so schedules are reproducible); decorrelates a fleet of
+      retriers hammering the same store.
+    * ``timeout_s`` — per-attempt wall-clock cap.  The attempt runs on a
+      worker thread and :class:`AttemptTimeout` (retryable iff it matches
+      ``retryable``) is raised when it blows the budget; the abandoned
+      attempt finishes in the background — acceptable at an I/O boundary,
+      never wrap device computation in it.
+    * ``on_retry(attempt, delay_s, exc)`` — observability callback fired
+      before each backoff sleep (attempt is 0-based); the shard fetch
+      counts ``StreamIO.io_retries`` through it.  Exceptions it raises
+      propagate — it is part of the control flow, not best-effort.
+    """
 
     max_retries: int = 3
     base_delay_s: float = 1.0
+    max_delay_s: float = 30.0
+    jitter: float = 0.0
+    retryable: Tuple[type, ...] = (Exception,)
+    timeout_s: Optional[float] = None
+    seed: int = 0
+    on_retry: Optional[Callable[[int, float, BaseException], None]] = None
 
-    def run(self, fn, *args, **kwargs):
-        last = None
+    def delays(self) -> List[float]:
+        """The deterministic pre-jitter backoff schedule (one delay per
+        retry) — pinned by tests so the schedule is a contract."""
+        return [min(self.base_delay_s * (2 ** a), self.max_delay_s)
+                for a in range(self.max_retries)]
+
+    def _attempt(self, fn, args, kwargs):
+        if self.timeout_s is None:
+            return fn(*args, **kwargs)
+        ex = concurrent.futures.ThreadPoolExecutor(max_workers=1)
+        fut = ex.submit(fn, *args, **kwargs)
+        try:
+            return fut.result(timeout=self.timeout_s)
+        except concurrent.futures.TimeoutError:
+            raise AttemptTimeout(
+                f"attempt exceeded {self.timeout_s}s") from None
+        finally:
+            # wait=False: a hung attempt must not hang the shutdown too
+            ex.shutdown(wait=False)
+
+    def run(self, fn, *args, on_retry: Optional[Callable] = None, **kwargs):
+        """``fn(*args, **kwargs)`` with retries; ``on_retry`` here chains
+        after the policy-level callback for per-call-site accounting."""
+        rng = random.Random(self.seed) if self.jitter else None
+        schedule = self.delays()
         for attempt in range(self.max_retries + 1):
             try:
-                return fn(*args, **kwargs)
-            except Exception as e:  # noqa: BLE001 — launcher boundary
-                last = e
+                return self._attempt(fn, args, kwargs)
+            except self.retryable as e:
                 if attempt == self.max_retries:
                     raise
-                time.sleep(self.base_delay_s * (2 ** attempt))
-        raise last
+                d = schedule[attempt]
+                if rng is not None:
+                    d *= 1.0 + self.jitter * rng.random()
+                if self.on_retry is not None:
+                    self.on_retry(attempt, d, e)
+                if on_retry is not None:
+                    on_retry(attempt, d, e)
+                time.sleep(d)
+        raise AssertionError("unreachable")  # loop always returns or raises

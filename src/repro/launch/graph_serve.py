@@ -10,6 +10,12 @@ principle applied to query serving instead of shard streaming).
 
 Tick structure (one host transfer per tick):
 
+0. **expire / shed** — requests past their ``deadline_ticks`` budget are
+   dropped from the queue or evicted from their lane (frontier row
+   cleared, slot freed so it backfills THIS tick), and a bounded ready
+   queue (``max_ready``) sheds overload newest-first.  Shed requests come
+   back ``done`` with ``reject_reason`` set — under pressure the server
+   degrades by rejecting predictably, never by stalling everyone.
 1. **admit** ready arrivals into free slots — device row writes install the
    lane's initial labels and one-hot frontier row mid-flight; the other
    lanes never observe it (axis-1 scatters don't cross lanes).
@@ -32,6 +38,7 @@ from __future__ import annotations
 import argparse
 import dataclasses
 import time
+from collections import deque
 from typing import List, Optional
 
 import jax
@@ -40,8 +47,16 @@ import numpy as np
 
 from ..core import frontier as fr
 from ..core import multisource as ms
+from ..distributed.fault import StragglerMonitor
 
 ALGOS = ("bfs", "sssp", "ppr")
+
+
+class ServeStuckError(RuntimeError):
+    """``GraphServer.serve`` exhausted ``max_ticks`` with requests still
+    incomplete — the message names the stuck rids and the slots they
+    occupy (or the queue they never left), which is what you need to tell
+    a livelocked lane from an admission starvation."""
 
 
 @dataclasses.dataclass
@@ -51,16 +66,28 @@ class QueryRequest:
     ``arrive_round`` is the serving tick at which the request becomes
     visible to the scheduler (ragged arrival in the tests/benchmarks);
     ``t_enqueue``/``t_done`` bracket queueing + service for the latency
-    rows; ``rounds`` counts the batched rounds the lane rode along."""
+    rows; ``rounds`` counts the batched rounds the lane rode along.
+
+    ``deadline_ticks`` is the degradation contract: the request may spend
+    at most that many serving ticks from enqueue (queue wait + service
+    combined).  At the first tick past the budget it is shed — evicted
+    from its lane (or dropped from the queue), ``done`` with
+    ``reject_reason="deadline"`` and ``labels=None`` — so one pathological
+    query cannot pin a slot forever.  ``reject_reason`` is also how
+    overload shedding reports (``"overload"``: the bounded ready queue was
+    full).  ``None`` deadline = run to completion (the default)."""
 
     rid: int
     source: int
     arrive_round: int = 0
+    deadline_ticks: Optional[int] = None
     slot: int = -1
+    enqueue_tick: int = -1
     t_enqueue: float = 0.0
     t_done: float = 0.0
     rounds: int = 0
     done: bool = False
+    reject_reason: Optional[str] = None
     labels: Optional[np.ndarray] = None
 
 
@@ -74,12 +101,28 @@ class GraphServer:
     """
 
     def __init__(self, g, algo: str = "bfs", max_batch: int = 8,
-                 damping: float = 0.85, tol: float = 1e-9):
+                 damping: float = 0.85, tol: float = 1e-9,
+                 max_ready: Optional[int] = None,
+                 straggler: Optional[StragglerMonitor] = None):
+        # ``max_ready`` bounds the ready queue (None = unbounded): arrivals
+        # beyond the bound are shed newest-first with
+        # ``reject_reason="overload"`` instead of queueing unboundedly —
+        # under sustained overload the server degrades by rejecting fast,
+        # not by growing latency without limit.  ``straggler`` (a
+        # distributed.StragglerMonitor) observes per-tick wall time;
+        # ``remesh_signals`` counts its trips (the launcher's cue to
+        # checkpoint + re-mesh, surfaced here because a serving tick is
+        # the unit whose tail latency the deadline contract prices).
         if algo not in ALGOS:
             raise ValueError(f"algo must be one of {ALGOS}, got {algo!r}")
         self.g = g
         self.algo = algo
         self.max_batch = max_batch
+        self.max_ready = max_ready
+        self.straggler = straggler
+        self.deadline_evictions = 0
+        self.overload_sheds = 0
+        self.remesh_signals = 0
         if algo == "ppr":
             sparse, dense = ms.make_ppr_steps(damping, tol)
             self.inf = None
@@ -131,12 +174,61 @@ class GraphServer:
             return np.asarray(jax.device_get(row))
         return np.asarray(jax.device_get(self.labels[slot]))
 
+    # -- graceful degradation ------------------------------------------------
+    def _expired(self, req: QueryRequest) -> bool:
+        return (req.deadline_ticks is not None and req.enqueue_tick >= 0
+                and self.tick_no - req.enqueue_tick >= req.deadline_ticks)
+
+    def _shed(self, req: QueryRequest, reason: str):
+        req.done = True
+        req.reject_reason = reason
+        req.labels = None
+        req.t_done = time.perf_counter()
+
+    def _expire(self, ready) -> None:
+        """Deadline pass, run BEFORE admission so a freed slot backfills
+        within the same tick: queued requests past budget are dropped, and
+        an expired lane is evicted — its frontier row (and, for ppr, its
+        residual row, which would otherwise resurrect the frontier next
+        round) is cleared so the lane goes inert, and its slot is freed."""
+        for req in [r for r in ready if self._expired(r)]:
+            ready.remove(req)
+            self._shed(req, "deadline")
+            self.deadline_evictions += 1
+        evict = [s for s, r in enumerate(self.slots)
+                 if r is not None and self._expired(r)]
+        for s in evict:
+            self._shed(self.slots[s], "deadline")
+            self.deadline_evictions += 1
+            self.slots[s] = None
+            self.free_slots.append(s)
+        if evict:
+            idx = jnp.asarray(evict, jnp.int32)
+            self.fmat = self.fmat.at[idx].set(False)
+            if self.algo == "ppr":
+                rank, resid = self.labels
+                self.labels = (rank.at[idx].set(0.0),
+                               resid.at[idx].set(0.0))
+
     # -- one serving tick ----------------------------------------------------
-    def tick(self, ready: List[QueryRequest]) -> bool:
-        """Admit from ``ready`` (in place), fetch once, retire, round.
-        Returns True while any lane did or may still do work."""
+    def tick(self, ready) -> bool:
+        """Expire, shed overload, admit from ``ready`` (in place, list or
+        deque), fetch once, retire, round.  Returns True while any lane
+        did or may still do work."""
+        t0 = time.perf_counter()
+        for r in ready:
+            if r.enqueue_tick < 0:
+                r.enqueue_tick = self.tick_no
+        self._expire(ready)
         while ready and self.free_slots:
-            self.admit(ready.pop(0))
+            self.admit(ready.popleft() if hasattr(ready, "popleft")
+                       else ready.pop(0))
+        # bounded ready queue, applied to what admission could not place:
+        # shed newest-first (oldest waiters keep their place — they have
+        # already paid the most queueing)
+        while self.max_ready is not None and len(ready) > self.max_ready:
+            self._shed(ready.pop(), "overload")
+            self.overload_sheds += 1
         total, ucount, umass, alive = self.eng.fetch(self.fmat)
         for slot, req in enumerate(self.slots):
             if req is not None and not alive[slot]:
@@ -152,23 +244,37 @@ class GraphServer:
                 if req is not None:
                     req.rounds += 1
         self.tick_no += 1
+        if self.straggler is not None and total > 0:
+            # per-tick wall time is the latency the deadline contract
+            # prices; a straggling tick streak is the re-mesh cue
+            if self.straggler.observe(time.perf_counter() - t0):
+                self.remesh_signals += 1
         return total > 0 or any(s is not None for s in self.slots)
 
     def serve(self, requests: List[QueryRequest],
               max_ticks: int = 1_000_000) -> List[QueryRequest]:
-        """Run every request to completion, honoring ragged
-        ``arrive_round`` schedules; freed slots backfill mid-flight."""
-        waiting = sorted(requests, key=lambda r: (r.arrive_round, r.rid))
-        ready: List[QueryRequest] = []
+        """Run every request to completion (or rejection — shed requests
+        come back ``done`` with ``reject_reason`` set and no labels),
+        honoring ragged ``arrive_round`` schedules; freed slots backfill
+        mid-flight.  Raises :class:`ServeStuckError` naming the stuck
+        requests when ``max_ticks`` is exhausted."""
+        waiting = deque(sorted(requests, key=lambda r: (r.arrive_round, r.rid)))
+        ready: deque = deque()
         for _ in range(max_ticks):
             while waiting and waiting[0].arrive_round <= self.tick_no:
-                req = waiting.pop(0)
+                req = waiting.popleft()
                 req.t_enqueue = time.perf_counter()
                 ready.append(req)
             busy = self.tick(ready)
             if not (waiting or ready or busy):
                 break
-        assert all(r.done for r in requests), "serve exhausted max_ticks"
+        if not all(r.done for r in requests):
+            stuck = ", ".join(
+                f"rid {r.rid} ({'slot ' + str(r.slot) if r.slot >= 0 and self.slots[r.slot] is r else 'queued'})"
+                for r in requests if not r.done)
+            raise ServeStuckError(
+                f"serve exhausted max_ticks={max_ticks} at tick "
+                f"{self.tick_no} with incomplete requests: {stuck}")
         return requests
 
 

@@ -1,0 +1,349 @@
+"""Crash-safe analytics: fault-injected runs, checkpoint/resume drills,
+and serving-tier graceful degradation.
+
+The recovery paths only run when something misbehaves, so this file makes
+things misbehave on purpose (``core/faultio.FaultInjector`` — seeded,
+deterministic) and pins the contracts:
+
+* a transient read fault (EIO, one-shot bitflip) heals through the retry
+  policy with **labels and stream accounting bitwise unchanged** — one
+  successful miss charges one shard, however many attempts it took;
+* persistent corruption surfaces as ``ShardCorruptError`` (typed, naming
+  the shard), never as silently wrong labels;
+* a run killed mid-flight (``os._exit`` in a real subprocess — no
+  unwinding, like a SIGKILL'd host) resumes from its last committed
+  snapshot and finishes **bitwise identical** to the uninterrupted run,
+  for streamed BFS and (under deterministic add) streamed pagerank;
+* the serving tier degrades predictably: deadline-expired lanes are
+  evicted and their slots backfill within the same tick, a bounded ready
+  queue sheds overload newest-first, and exhaustion raises a typed
+  ``ServeStuckError`` naming the stuck requests.
+
+The ``chaos-smoke`` CI job runs exactly this file.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+import repro
+from repro import checkpoint as ck
+from repro.checkpoint import RunCheckpointer
+from repro.core import faultio, from_coo, tier_graph
+from repro.core import operators as ops
+from repro.core.algorithms import bfs, pagerank
+from repro.core.faultio import FaultInjector, ShardCorruptError
+from repro.distributed import StragglerMonitor
+from repro.launch.graph_serve import (GraphServer, QueryRequest,
+                                      ServeStuckError)
+
+
+def _graph(seed=0, n=512, m=4096):
+    rng = np.random.default_rng(seed)
+    return from_coo(rng.integers(0, n, m), rng.integers(0, n, m), n,
+                    block_size=64)
+
+
+def _tiered(seed=0):
+    return tier_graph(_graph(seed), nshards=4, resident_shards=2)
+
+
+@pytest.fixture(scope="module")
+def reference():
+    """Uninterrupted streamed BFS labels + stats, shared across drills."""
+    tg = _tiered()
+    dist, st = bfs.bfs_dd_sparse(tg, 0)
+    return np.asarray(dist), st, tg.shard_bytes
+
+
+# ---------------------------------------------------------------------------
+# fault-injected shard I/O
+# ---------------------------------------------------------------------------
+
+def test_transient_eio_heals_bitwise_with_exact_accounting(reference):
+    ref, st_ref, shard_bytes = reference
+    tg = _tiered()
+    tg.set_fault_injector(FaultInjector([faultio.eio("shard_read", at=1,
+                                                     times=2)]))
+    dist, st = bfs.bfs_dd_sparse(tg, 0)
+    assert np.array_equal(np.asarray(dist), ref)
+    assert tg.fault.fired_kinds()["eio"] == 2
+    assert st.io_retries == 2
+    # the invariants survive retries: a healed miss charges once
+    assert st.shards_streamed == st_ref.shards_streamed
+    assert st.h2d_bytes == st.shards_streamed * shard_bytes
+    assert (st.buffer_hits + st.shards_streamed
+            == st_ref.buffer_hits + st_ref.shards_streamed)
+
+
+def test_transient_bitflip_heals_via_checksum_retry(reference):
+    ref, _, _ = reference
+    tg = _tiered()
+    tg.set_fault_injector(FaultInjector(
+        [faultio.FaultSpec("shard_read", "bitflip", at=0, times=1)]))
+    dist, st = bfs.bfs_dd_sparse(tg, 0)
+    assert np.array_equal(np.asarray(dist), ref)
+    assert st.checksum_failures == 1  # caught, then the re-read was clean
+    assert st.io_retries == 1
+
+
+def test_persistent_bitflip_raises_typed_corrupt_error():
+    tg = _tiered()
+    tg.set_fault_injector(FaultInjector([faultio.bitflip("shard_read")]))
+    with pytest.raises(ShardCorruptError, match=r"crc32 0x"):
+        bfs.bfs_dd_sparse(tg, 0)
+    # initial attempt + the whole retry budget all failed verification
+    assert tg.io.checksum_failures == tg.retry.max_retries + 1
+
+
+def test_torn_read_raises_typed_corrupt_error():
+    tg = _tiered()
+    tg.set_fault_injector(FaultInjector([faultio.torn("shard_read")]))
+    with pytest.raises(ShardCorruptError):
+        bfs.bfs_dd_sparse(tg, 0)
+
+
+def test_injected_latency_lands_in_io_wait(reference):
+    ref, _, _ = reference
+    tg = _tiered()
+    tg.set_fault_injector(FaultInjector([faultio.delay("shard_read", 0.05)]))
+    dist, st = bfs.bfs_dd_sparse(tg, 0)
+    assert np.array_equal(np.asarray(dist), ref)
+    assert st.io_wait_us >= 50_000
+
+
+def test_corruption_off_store_is_detected_not_repaired(tmp_path, reference):
+    """Bit-rot on the persisted store: lazy fetch-time verify raises, the
+    eager ``verify="open"`` fsck raises at open, and the file is left for
+    the operator (never silently rewritten)."""
+    ref, _, _ = reference
+    ck.save_graph(_tiered(), str(tmp_path))
+    p = tmp_path / "shard_000001.npz"
+    blob = bytearray(p.read_bytes())
+    blob[len(blob) // 2] ^= 0xFF
+    p.write_bytes(bytes(blob))
+    before = p.read_bytes()
+    with pytest.raises(ShardCorruptError, match="shard 1"):
+        ck.open_graph(str(tmp_path), verify="open")
+    g = ck.open_graph(str(tmp_path))  # lazy mode opens fine...
+    with pytest.raises(ShardCorruptError):
+        bfs.bfs_dd_sparse(g, 0)       # ...and fails at first fetch
+    assert p.read_bytes() == before
+
+
+# ---------------------------------------------------------------------------
+# RunCheckpointer
+# ---------------------------------------------------------------------------
+
+def test_run_checkpointer_cadence_and_rotation(tmp_path):
+    ckr = RunCheckpointer(str(tmp_path), every=3, keep_last=2)
+    state = {"x": jnp.arange(4)}
+    for r in range(1, 10):
+        ckr.maybe_save(state, r)
+    # fires at 3, 6, 9; rotation keeps the last two snapshots
+    assert ckr.saves == 3
+    steps = sorted(f for f in os.listdir(tmp_path) if f.startswith("step_"))
+    assert steps == ["step_0000000006.npz", "step_0000000009.npz"]
+    # round jumps past a multiple (fused stretches) still fire
+    ckr.maybe_save(state, 25)
+    assert ckr.saves == 4
+
+
+def test_run_checkpointer_load_fresh_dir_returns_round_zero(tmp_path):
+    ckr = RunCheckpointer(str(tmp_path / "empty"))
+    state = {"x": jnp.arange(4)}
+    got, start = ckr.load(state)
+    assert start == 0 and got is state
+
+
+def test_run_checkpointer_rejects_bad_every(tmp_path):
+    with pytest.raises(ValueError, match="every"):
+        RunCheckpointer(str(tmp_path), every=0)
+
+
+def test_in_process_resume_is_bitwise(tmp_path, reference):
+    ref, _, _ = reference
+    d1, _ = bfs.bfs_dd_sparse(_tiered(), 0, checkpointer=RunCheckpointer(
+        str(tmp_path / "a"), every=2))
+    assert np.array_equal(np.asarray(d1), ref)
+    # second run resumes off the first's snapshots; same fixpoint, bitwise
+    d2, _ = bfs.bfs_dd_sparse(_tiered(), 0, checkpointer=RunCheckpointer(
+        str(tmp_path / "a"), every=2))
+    assert np.array_equal(np.asarray(d2), ref)
+
+
+# ---------------------------------------------------------------------------
+# kill-at-round-r drills (real subprocess, os._exit — nothing unwinds)
+# ---------------------------------------------------------------------------
+
+_CHILD = textwrap.dedent("""
+    import sys
+    import numpy as np
+    from repro.core import faultio, from_coo, tier_graph
+    from repro.core import operators as ops
+    from repro.core.algorithms import bfs, pagerank
+    from repro.checkpoint import RunCheckpointer
+
+    algo, ckdir, mode = sys.argv[1], sys.argv[2], sys.argv[3]
+    rng = np.random.default_rng(0)
+    n, m = 512, 4096
+    g0 = from_coo(rng.integers(0, n, m), rng.integers(0, n, m), n,
+                  block_size=64)
+    tg = tier_graph(g0, nshards=4, resident_shards=2)
+    if mode == "kill":
+        tg.set_fault_injector(
+            faultio.FaultInjector([faultio.kill("round", at=3)]))
+    ckr = RunCheckpointer(ckdir, every=2)
+    if algo == "bfs":
+        out, st = bfs.bfs_dd_sparse(tg, 0, checkpointer=ckr)
+    else:
+        ops.set_deterministic_add(True)
+        out, st = pagerank.pr_push(tg, max_iters=20, checkpointer=ckr)
+    np.save(ckdir + "/result.npy", np.asarray(out))
+    print("DONE", st.rounds)
+""")
+
+
+def _run_child(algo, ckdir, mode):
+    env = dict(os.environ)
+    src_dir = os.path.dirname(os.path.abspath(list(repro.__path__)[0]))
+    env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    return subprocess.run([sys.executable, "-c", _CHILD, algo, ckdir, mode],
+                          env=env, capture_output=True, text=True,
+                          timeout=300)
+
+
+@pytest.mark.parametrize("algo", ["bfs", "pagerank"])
+def test_kill_and_resume_matches_uninterrupted_bitwise(tmp_path, algo):
+    ref_dir = tmp_path / "ref"
+    kill_dir = tmp_path / "kill"
+    ref_dir.mkdir(), kill_dir.mkdir()
+
+    p = _run_child(algo, str(ref_dir), "plain")
+    assert p.returncode == 0, p.stderr[-2000:]
+    ref = np.load(ref_dir / "result.npy")
+
+    p = _run_child(algo, str(kill_dir), "kill")
+    assert p.returncode == 7, (p.returncode, p.stderr[-2000:])  # died hard
+    assert not (kill_dir / "result.npy").exists()
+    snaps = [f for f in os.listdir(kill_dir) if f.startswith("step_")]
+    assert snaps  # a snapshot committed before the kill
+
+    p = _run_child(algo, str(kill_dir), "resume")
+    assert p.returncode == 0, p.stderr[-2000:]
+    got = np.load(kill_dir / "result.npy")
+    assert np.array_equal(got, ref)  # bitwise, not allclose
+
+
+# ---------------------------------------------------------------------------
+# serving-tier graceful degradation
+# ---------------------------------------------------------------------------
+
+def _serve_graph(seed=1, n=256, m=2048):
+    rng = np.random.default_rng(seed)
+    return from_coo(rng.integers(0, n, m), rng.integers(0, n, m), n,
+                    build_csc=True)
+
+
+def test_deadline_eviction_frees_slot_for_backfill():
+    g = _serve_graph()
+    srv = GraphServer(g, algo="bfs", max_batch=2)
+    reqs = [QueryRequest(rid=0, source=0, deadline_ticks=1),
+            QueryRequest(rid=1, source=1),
+            QueryRequest(rid=2, source=2, arrive_round=1)]
+    out = srv.serve(reqs)
+    evicted, survivor, backfill = out
+    assert evicted.done and evicted.reject_reason == "deadline"
+    assert evicted.labels is None
+    assert survivor.reject_reason is None and survivor.labels is not None
+    assert backfill.reject_reason is None and backfill.labels is not None
+    assert srv.deadline_evictions == 1
+    assert not srv.slots[0] and not srv.slots[1]  # all lanes drained
+
+
+def test_eviction_backfills_within_one_tick():
+    g = _serve_graph()
+    srv = GraphServer(g, algo="bfs", max_batch=1)
+    stuck = QueryRequest(rid=0, source=0, deadline_ticks=2)
+    nxt = QueryRequest(rid=1, source=1)
+    ready = [stuck, nxt]
+    srv.tick(ready)               # tick 0: stuck admitted, nxt queued
+    assert stuck.slot == 0 and nxt.slot == -1
+    srv.tick(ready)               # tick 1: still within deadline
+    assert not stuck.done
+    srv.tick(ready)               # tick 2: evict AND admit nxt, same tick
+    assert stuck.done and stuck.reject_reason == "deadline"
+    assert nxt.slot == 0 and srv.slots[0] is nxt
+
+
+def test_ppr_eviction_does_not_resurrect_the_lane():
+    g = _serve_graph()
+    srv = GraphServer(g, algo="ppr", max_batch=2)
+    out = srv.serve([QueryRequest(rid=0, source=0, deadline_ticks=1),
+                     QueryRequest(rid=1, source=1)])
+    assert out[0].reject_reason == "deadline"
+    assert out[1].labels is not None
+    # an evicted ppr lane's residual is zeroed: the server went fully idle
+    assert not srv.tick([])
+
+
+def test_bounded_ready_queue_sheds_overload_newest_first():
+    g = _serve_graph()
+    srv = GraphServer(g, algo="bfs", max_batch=1, max_ready=1)
+    reqs = [QueryRequest(rid=i, source=i) for i in range(5)]
+    out = srv.serve(reqs)
+    assert all(r.done for r in out)
+    shed = [r.rid for r in out if r.reject_reason == "overload"]
+    served = [r.rid for r in out if r.reject_reason is None]
+    assert srv.overload_sheds == len(shed) > 0
+    assert 0 in served                    # oldest waiter kept its place
+    assert max(served) < min(shed)        # newest arrivals were the shed ones
+    for r in out:
+        if r.reject_reason == "overload":
+            assert r.labels is None
+
+
+def test_queued_deadline_expiry_sheds_without_service():
+    g = _serve_graph()
+    srv = GraphServer(g, algo="bfs", max_batch=1)
+    hog = QueryRequest(rid=0, source=0)
+    impatient = QueryRequest(rid=1, source=1, deadline_ticks=1)
+    out = srv.serve([hog, impatient])
+    assert out[0].labels is not None
+    assert out[1].reject_reason == "deadline" and out[1].rounds == 0
+
+
+def test_straggler_monitor_hooks_tick_wall_time():
+    g = _serve_graph()
+    srv = GraphServer(g, algo="bfs", max_batch=2,
+                      straggler=StragglerMonitor(threshold=0.0, patience=1))
+    srv.serve([QueryRequest(rid=i, source=i) for i in range(6)])
+    # threshold 0 flags every post-warm-up tick: the hook is live
+    assert srv.remesh_signals > 0
+
+
+def test_serve_stuck_raises_typed_error_naming_requests():
+    g = _serve_graph()
+    srv = GraphServer(g, algo="bfs", max_batch=1)
+    with pytest.raises(ServeStuckError, match=r"rid 7 \(slot 0\)"):
+        srv.serve([QueryRequest(rid=7, source=3)], max_ticks=1)
+
+
+def test_no_deadline_requests_run_to_completion_unchanged():
+    """Degradation machinery is inert when nothing opts in: results match
+    a server without any of the new knobs."""
+    g = _serve_graph()
+    a = GraphServer(g, algo="bfs", max_batch=4)
+    out_a = a.serve([QueryRequest(rid=i, source=i) for i in range(8)])
+    b = GraphServer(g, algo="bfs", max_batch=4, max_ready=100,
+                    straggler=StragglerMonitor())
+    out_b = b.serve([QueryRequest(rid=i, source=i) for i in range(8)])
+    for ra, rb in zip(out_a, out_b):
+        assert np.array_equal(ra.labels, rb.labels)
+    assert b.deadline_evictions == 0 and b.overload_sheds == 0

@@ -1,0 +1,238 @@
+"""Fault-injection + hardened-retry unit contracts.
+
+``core/faultio.FaultInjector`` is the deterministic chaos source every
+recovery path is tested through (tests/test_chaos.py drives whole runs);
+this file pins the injector's own semantics — plans fire on exact call
+counts, corruption only ever touches copies — and the hardened
+``distributed.RetryPolicy``: the backoff schedule is a contract (pinned
+with a monkeypatched ``time.sleep``), jitter is seeded, only ``retryable``
+types retry, and per-attempt timeouts surface as ``AttemptTimeout``.
+``StragglerMonitor`` / ``ElasticPolicy`` edge cases ride along
+(warm-up window, flag reset, exact-fit mesh shapes).
+"""
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import faultio
+from repro.core.faultio import (FaultInjector, FaultSpec, InjectedIOError,
+                                ShardCorruptError)
+from repro.distributed import (AttemptTimeout, ElasticPolicy, RetryPolicy,
+                               StragglerMonitor)
+
+
+# ---------------------------------------------------------------------------
+# FaultInjector
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_rejects_unknown_kind():
+    with pytest.raises(ValueError, match="unknown fault kind"):
+        FaultSpec(op="shard_read", kind="gremlin")
+
+
+def test_eio_fires_on_exact_call_window():
+    inj = FaultInjector([faultio.eio("shard_read", at=2, times=2)])
+    for i in range(6):
+        if i in (2, 3):
+            with pytest.raises(InjectedIOError):
+                inj.tick("shard_read")
+        else:
+            assert inj.tick("shard_read") == []
+    assert inj.fired_kinds()["eio"] == 2
+    assert inj.calls("shard_read") == 6
+
+
+def test_keyed_spec_counts_per_key_and_only_matches_its_key():
+    inj = FaultInjector([faultio.eio("shard_read", at=1, key=3)])
+    # other keys never fire, however many calls they log
+    for _ in range(4):
+        assert inj.tick("shard_read", key=0) == []
+    assert inj.tick("shard_read", key=3) == []       # key-3 call #0
+    with pytest.raises(InjectedIOError):
+        inj.tick("shard_read", key=3)                # key-3 call #1 fires
+    assert inj.calls("shard_read", key=3) == 2
+    assert inj.calls("shard_read", key=0) == 4
+
+
+def test_corruption_touches_copies_never_the_store():
+    inj = FaultInjector([faultio.bitflip("shard_read", at=0)], seed=7)
+    a = np.arange(16, dtype=np.int32)
+    b = np.ones(16, dtype=np.float32)
+    keep_a, keep_b = a.copy(), b.copy()
+    ca, cb = inj.shard_read(0, a, b)
+    assert np.array_equal(a, keep_a) and np.array_equal(b, keep_b)
+    flipped = (not np.array_equal(ca, a)) or (not np.array_equal(cb, b))
+    assert flipped  # exactly one bit somewhere in the copies
+
+
+def test_bitflip_is_deterministic_per_seed_and_fire_index():
+    a = np.arange(64, dtype=np.int32)
+    outs = []
+    for _ in range(2):
+        inj = FaultInjector([faultio.bitflip("shard_read", at=0)], seed=11)
+        (c,) = inj.shard_read(0, a)
+        outs.append(c)
+    assert np.array_equal(outs[0], outs[1])
+    inj2 = FaultInjector([faultio.bitflip("shard_read", at=0)], seed=12)
+    (c2,) = inj2.shard_read(0, a)
+    assert not np.array_equal(outs[0], c2)  # different seed, different bit
+
+
+def test_torn_zeroes_tail_half():
+    inj = FaultInjector([faultio.torn("shard_read", at=0, times=1)])
+    a = np.full(8, 0x0101_0101, np.int32)
+    (c,) = inj.shard_read(0, a)
+    flat = c.view(np.uint8)
+    assert (flat[flat.size // 2:] == 0).all()
+    assert (flat[: flat.size // 2] != 0).all()
+
+
+def test_delay_sleeps_and_logs():
+    inj = FaultInjector([faultio.delay("round", 0.02, at=1)])
+    t0 = time.perf_counter()
+    inj.tick("round", key=0)
+    fast = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    inj.tick("round", key=1)
+    slow = time.perf_counter() - t0
+    assert slow >= 0.02 > fast
+    assert inj.fired_kinds()["delay"] == 1
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy hardening
+# ---------------------------------------------------------------------------
+
+def test_backoff_schedule_is_exponential_with_cap():
+    p = RetryPolicy(max_retries=5, base_delay_s=1.0, max_delay_s=10.0)
+    assert p.delays() == [1.0, 2.0, 4.0, 8.0, 10.0]
+
+
+def test_run_sleeps_the_pinned_schedule(monkeypatch):
+    slept = []
+    monkeypatch.setattr(time, "sleep", slept.append)
+    attempts = []
+
+    def always_fails():
+        attempts.append(1)
+        raise OSError("transient")
+
+    p = RetryPolicy(max_retries=3, base_delay_s=0.5, max_delay_s=30.0,
+                    retryable=(OSError,))
+    with pytest.raises(OSError):
+        p.run(always_fails)
+    assert len(attempts) == 4            # initial + 3 retries
+    assert slept == [0.5, 1.0, 2.0]      # no sleep after the final failure
+
+
+def test_jitter_is_seeded_and_bounded(monkeypatch):
+    def sleeps_for(seed):
+        slept = []
+        monkeypatch.setattr(time, "sleep", slept.append)
+        p = RetryPolicy(max_retries=3, base_delay_s=1.0, jitter=0.5,
+                        seed=seed, retryable=(OSError,))
+        with pytest.raises(OSError):
+            p.run(lambda: (_ for _ in ()).throw(OSError()))
+        return slept
+
+    a, b = sleeps_for(3), sleeps_for(3)
+    assert a == b  # reproducible schedule
+    base = RetryPolicy(max_retries=3, base_delay_s=1.0).delays()
+    for d, d0 in zip(a, base):
+        assert d0 <= d <= d0 * 1.5
+    assert sleeps_for(4) != a  # a different fleet member decorrelates
+
+
+def test_non_retryable_types_propagate_immediately(monkeypatch):
+    monkeypatch.setattr(time, "sleep", lambda _: None)
+    calls = []
+
+    def bad():
+        calls.append(1)
+        raise KeyError("not transient")
+
+    p = RetryPolicy(max_retries=3, base_delay_s=0.0, retryable=(OSError,))
+    with pytest.raises(KeyError):
+        p.run(bad)
+    assert len(calls) == 1
+
+
+def test_on_retry_observes_attempt_delay_exc(monkeypatch):
+    monkeypatch.setattr(time, "sleep", lambda _: None)
+    policy_seen, site_seen = [], []
+
+    def flaky():
+        if len(site_seen) < 2:
+            raise OSError("eio")
+        return "ok"
+
+    p = RetryPolicy(max_retries=3, base_delay_s=1.0, retryable=(OSError,),
+                    on_retry=lambda a, d, e: policy_seen.append((a, d)))
+    out = p.run(flaky, on_retry=lambda a, d, e: site_seen.append((a, d)))
+    assert out == "ok"
+    # policy-level and call-site callbacks both saw every retry, in order
+    assert policy_seen == site_seen == [(0, 1.0), (1, 2.0)]
+
+
+def test_attempt_timeout_raises_and_is_retryable(monkeypatch):
+    import threading
+    monkeypatch.setattr(time, "sleep", lambda _: None)
+    tries = []
+
+    def hangs_once():
+        tries.append(1)
+        if len(tries) == 1:
+            # a genuine blocking wait the per-attempt timeout must cut
+            # across (monkeypatching time.sleep doesn't reach Event.wait)
+            threading.Event().wait(2.0)
+        return "ok"
+
+    p = RetryPolicy(max_retries=1, base_delay_s=0.0, timeout_s=0.1,
+                    retryable=(AttemptTimeout,))
+    assert p.run(hangs_once) == "ok"
+    assert len(tries) == 2
+
+    with pytest.raises(AttemptTimeout):
+        RetryPolicy(max_retries=0, timeout_s=0.05).run(
+            lambda: threading.Event().wait(2.0))
+
+
+# ---------------------------------------------------------------------------
+# StragglerMonitor / ElasticPolicy edges
+# ---------------------------------------------------------------------------
+
+def test_straggler_warmup_window_never_triggers():
+    m = StragglerMonitor(threshold=0.0, patience=1)
+    for _ in range(7):  # < 8 observations: no baseline yet
+        assert not m.observe(10.0)
+
+
+def test_straggler_fast_step_resets_flag_streak():
+    m = StragglerMonitor(threshold=2.0, patience=2)
+    for _ in range(10):
+        assert not m.observe(0.1)
+    assert not m.observe(0.5)   # flag 1
+    assert not m.observe(0.1)   # fast step resets the streak
+    assert not m.observe(0.5)   # flag 1 again — patience not reached
+    assert m.observe(0.5)       # flag 2 consecutive → trigger
+
+
+def test_straggler_patience_requires_consecutive_flags():
+    m = StragglerMonitor(threshold=2.0, patience=3)
+    for _ in range(10):
+        m.observe(0.1)
+    assert not m.observe(0.5)
+    assert not m.observe(0.5)
+    assert m.observe(0.5)  # third consecutive flag trips
+
+
+def test_elastic_policy_exact_fit_and_zero():
+    e = ElasticPolicy()
+    assert e.choose(512) == (2, 16, 16)   # exact product match
+    assert e.choose(256) == (16, 16)
+    assert e.choose(4) == (2, 2)
+    assert e.choose(3) == (1, 1)
+    with pytest.raises(RuntimeError, match="no devices"):
+        e.choose(0)

@@ -234,6 +234,117 @@ def test_load_pytree_detects_manifest_archive_divergence(tmp_path):
         load_pytree({"a": jnp.ones((3,))}, str(tmp_path))
 
 
+def test_load_pytree_empty_dir_names_directory_and_expectation(tmp_path):
+    from repro.checkpoint import load_pytree
+
+    missing = str(tmp_path / "never_saved")
+    with pytest.raises(FileNotFoundError,
+                       match=r"no checkpoints under .*never_saved"):
+        load_pytree({"a": jnp.ones((3,))}, missing)
+    # an existing-but-empty directory gets the same actionable message
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    with pytest.raises(FileNotFoundError, match="step_\\*\\.npz"):
+        load_pytree({"a": jnp.ones((3,))}, str(empty))
+
+
+# ---------------------------------------------------------------------------
+# checksummed store (v2 manifests: per-shard crc32 + dtype/shape records)
+# ---------------------------------------------------------------------------
+
+def test_manifest_records_integrity_triple_and_fetch_verifies(tmp_path):
+    from repro.core.tiered import shard_crc
+
+    g = _test_graph(seed=9)
+    tg = tier_graph(g, nshards=4, resident_shards=2)
+    save_graph(tg, str(tmp_path))
+    with open(os.path.join(str(tmp_path), "graph_manifest.json")) as f:
+        man = json.load(f)
+    assert man["format"] == "tiered-graph-v2"
+    assert man["shard_dtypes"] == ["int32", "int32", "float32"]
+    assert man["shard_shape"] == [tg.epd]
+    assert len(man["shard_crcs"]) == 4
+    for sid in range(4):
+        assert man["shard_crcs"][sid] == shard_crc(*tg._host[sid])
+    re = open_graph(str(tmp_path))
+    assert re.shard_crcs == [int(c) for c in man["shard_crcs"]]
+    assert re.verify_checksums
+    # and the in-memory cut carries the same CRCs without a store
+    assert tg.shard_crcs == re.shard_crcs
+
+
+def test_open_graph_verify_modes(tmp_path):
+    from repro.core.faultio import ShardCorruptError
+
+    g = _test_graph(seed=10)
+    save_graph(g, str(tmp_path), nshards=4)
+    p = os.path.join(str(tmp_path), "shard_000001.npz")
+    blob = bytearray(open(p, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    with open(p, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(ShardCorruptError, match="shard 1"):
+        open_graph(str(tmp_path), verify="open")     # eager fsck
+    tg = open_graph(str(tmp_path))                   # lazy opens fine
+    with pytest.raises(ShardCorruptError):
+        bfs.bfs_dd_sparse(tg, 0)                     # caught at fetch
+    off = open_graph(str(tmp_path), verify="off")    # trusts the store
+    assert not off.verify_checksums
+    with pytest.raises(ValueError, match="fetch\\|open\\|off"):
+        open_graph(str(tmp_path), verify="eventually")
+
+
+def test_open_graph_accepts_v1_store_unverified(tmp_path):
+    g = _test_graph(seed=11)
+    save_graph(g, str(tmp_path), nshards=2)
+    mpath = os.path.join(str(tmp_path), "graph_manifest.json")
+    with open(mpath) as f:
+        man = json.load(f)
+    man["format"] = "tiered-graph-v1"
+    for k in ("shard_crcs", "shard_dtypes", "shard_shape"):
+        man.pop(k)
+    with open(mpath, "w") as f:
+        json.dump(man, f)
+    tg = open_graph(str(tmp_path), verify="open")  # nothing to check
+    assert tg.shard_crcs is None
+    ref = np.asarray(bfs.bfs_dd_sparse(g, 0)[0])
+    np.testing.assert_array_equal(ref,
+                                  np.asarray(bfs.bfs_dd_sparse(tg, 0)[0]))
+
+
+def test_open_graph_unreadable_shard_is_typed(tmp_path):
+    from repro.core.faultio import ShardCorruptError
+
+    g = _test_graph(seed=12)
+    save_graph(g, str(tmp_path), nshards=2)
+    p = os.path.join(str(tmp_path), "shard_000000.npz")
+    with open(p, "wb") as f:
+        f.write(b"not a zip at all")  # torn write that lost the archive
+    with pytest.raises(ShardCorruptError, match="unreadable"):
+        open_graph(str(tmp_path))
+
+
+def test_stream_accounting_exact_under_injected_retries():
+    """The h2d/hit invariants are retry-proof: a healed miss charges one
+    shard_bytes however many attempts it took (PR-8's accounting rider on
+    the existing exactness contract)."""
+    from repro.core import faultio
+
+    g = _test_graph(seed=14)
+    tg = tier_graph(g, nshards=6, resident_shards=2)
+    ref_dist, ref_st = bfs.bfs_dd_sparse(tg, 0)
+    tg2 = tier_graph(g, nshards=6, resident_shards=2)
+    tg2.set_fault_injector(faultio.FaultInjector(
+        [faultio.eio("shard_read", at=0, times=1),
+         faultio.eio("shard_read", at=4, times=2)]))
+    dist, st = bfs.bfs_dd_sparse(tg2, 0)
+    np.testing.assert_array_equal(np.asarray(ref_dist), np.asarray(dist))
+    assert st.io_retries == 3
+    assert st.h2d_bytes == st.shards_streamed * tg2.shard_bytes
+    assert st.shards_streamed == ref_st.shards_streamed
+    assert st.buffer_hits == ref_st.buffer_hits
+
+
 # ---------------------------------------------------------------------------
 # from_coo dedup: minimum weight per (src, dst), self-loops dropped
 # ---------------------------------------------------------------------------
