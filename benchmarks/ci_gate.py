@@ -108,15 +108,26 @@ def cmd_ooc(args) -> int:
     rows = _load(args.bench)
     lines = [
         f"## out-of-core streamed gate (max per-edge ratio "
-        f"{args.max_ratio:g}×)",
+        f"{args.max_ratio:g}× bfs, {args.max_ratio * 2:g}× dense pr — "
+        "the all-resident baseline fuses into one device stretch; dense "
+        "pr streams every shard every round and keeps its per-round sync)",
         "",
-        "| algo | streamed µs/edge | resident µs/edge | ratio | h2d model |"
-        " bitwise | gate |",
-        "|:-----|-----------------:|-----------------:|------:|:----------|"
-        ":--------|:-----|",
+        "| algo | streamed µs/edge | resident µs/edge | ratio | bar |"
+        " h2d model | bitwise | gate |",
+        "|:-----|-----------------:|-----------------:|------:|----:|"
+        ":----------|:--------|:-----|",
     ]
     failures = []
     for algo in ("bfs", "pr"):
+        # per-algo bar: the all-resident baseline runs as ONE fused device
+        # stretch (its live set always fits the pool), while dense
+        # pagerank's streamed run relaxes EVERY shard EVERY round through a
+        # 2-buffer pool and pays one host sync per round that fusion can
+        # never amortize (the live set outgrows the pool by construction) —
+        # its ratio prices host-sync amortization on top of the H2D tax, so
+        # it gets 2× the headroom. Frontier-driven bfs fuses its own
+        # stretches and keeps the tight bar.
+        bar = args.max_ratio if algo == "bfs" else args.max_ratio * 2
         sname = f"outofcore/{algo}_streamed"
         rname = f"outofcore/{algo}_resident"
         if sname not in rows or rname not in rows:
@@ -134,9 +145,9 @@ def cmd_ooc(args) -> int:
         else:
             spe, rpe = _wall_us(s) / se, _wall_us(r) / re_
             ratio = spe / rpe if rpe > 0 else float("inf")
-            if ratio > args.max_ratio:
+            if ratio > bar:
                 problems.append(
-                    f"streamed {spe:.4f}µs/edge > {args.max_ratio:g}× "
+                    f"streamed {spe:.4f}µs/edge > {bar:g}× "
                     f"resident {rpe:.4f}µs/edge (ratio {ratio:.2f})")
         model_ok = (sst.get("h2d_bytes") ==
                     sst.get("shards_streamed", 0) * sst.get("shard_bytes", 0))
@@ -154,11 +165,39 @@ def cmd_ooc(args) -> int:
                 f"csr/budget ratio {sst.get('budget_ratio')} < 4 — the "
                 "streamed row isn't actually out-of-core")
         lines.append(
-            f"| {algo} | {spe:.4f} | {rpe:.4f} | {ratio:.2f}× |"
+            f"| {algo} | {spe:.4f} | {rpe:.4f} | {ratio:.2f}× | {bar:g}× |"
             f" {'ok' if model_ok else '**FAIL**'} |"
             f" {'ok' if bitwise else '**FAIL**'} |"
             f" {'ok' if not problems else '**FAIL**'} |")
         failures += [f"{algo}: {p}" for p in problems]
+    # PR 9 cells, gated when the sweep emitted them: the eager-streamed
+    # row's bitwise flag also asserts its stream counters equal the fused
+    # row's (fusion buys host syncs, never different work), and the
+    # streamed dirop must come out bitwise equal to the resident run while
+    # actually out-of-core
+    extra_notes = []
+    for name, what in (("outofcore/bfs_eager_streamed",
+                        "eager ≡ fused (labels + stream counters)"),
+                       ("outofcore/dirop_streamed",
+                        "streamed dirop ≡ resident labels")):
+        r = rows.get(name)
+        if r is None:
+            extra_notes.append(f"{name}: not in this sweep (skipped)")
+            continue
+        st = r.get("stats") or {}
+        ok = bool(st.get("bitwise_equal", 0))
+        ooc = st.get("budget_ratio", 0) >= 4
+        extra_notes.append(
+            f"{name}: {what} — {'ok' if ok else '**FAIL**'}; "
+            f"out-of-core ratio {st.get('budget_ratio', 0):.0f}× — "
+            f"{'ok' if ooc else '**FAIL**'}")
+        if not ok:
+            failures.append(f"{name}: bitwise/counter equality flag unset")
+        if not ooc:
+            failures.append(
+                f"{name}: budget_ratio {st.get('budget_ratio')} < 4 — "
+                "not actually out-of-core")
+    lines += [""] + extra_notes
     _summary(lines)
     if failures:
         print("OOC GATE FAILED:", *failures, sep="\n  ", file=sys.stderr)
@@ -227,11 +266,16 @@ def cmd_serve(args) -> int:
 
 def cmd_trend(args) -> int:
     cur = _load(args.bench)
+    # a missing/expired/corrupt baseline is the NORMAL first-run state of
+    # a trend job (new branch, artifact retention lapsed, torn upload) —
+    # degrade to a summary note and exit 0; only this run's own file is
+    # allowed to fail the job
     try:
         prev = _load(args.prev)
-    except OSError as e:
-        _summary([f"## bench trend", "",
-                  f"no previous artifact to diff against ({e})"])
+    except (OSError, ValueError, KeyError, TypeError, AttributeError) as e:
+        _summary(["## bench trend", "",
+                  "no previous artifact to diff against "
+                  f"({type(e).__name__}: {e}) — trend resumes next run"])
         return 0
     lines = [
         f"## bench trend vs previous main run",

@@ -6,12 +6,25 @@ bfs and pagerank run twice on the SAME streamed dispatch path:
 
 * ``*_streamed``  — ``resident_shards=2``: the device pool holds 2 of 16
   shards, so the CSR is 8× the resident budget (the acceptance contract
-  asks ≥ 4×) and every round really streams.
+  asks ≥ 4×) and every round really streams.  BFS/PR stream through the
+  default rung-FUSED dispatch (``engine.run_streamed``: stable live sets
+  run as device-resident stretches).
 * ``*_resident``  — pool ≥ all shards: after the first cold pass every
   scheduled shard is a buffer hit.  This is the all-resident baseline the
   streamed run must stay within 2× of **per edge touched** — both sides
   pay the identical per-round dispatch, so the contrast isolates what
   streaming itself costs (enforced by ``ci_gate.py ooc``).
+
+Two more cells cover the PR 9 extensions:
+
+* ``bfs_eager_streamed`` — the same out-of-core run with ``fused=False``
+  (one host sync per round): labels AND the stream counters
+  (``h2d_bytes`` / ``shards_streamed`` / ``edges_touched``) must equal
+  the fused row's — fusion buys host syncs, never different work.
+* ``dirop_streamed`` — direction-optimizing BFS fully out-of-core: push
+  rounds stream live CSR shards, pull rounds stream the CSC mirror
+  (persisted next to the CSR by ``save_graph``), labels bitwise equal to
+  the resident ``bfs_dirop``.
 
 Labels are checked here, not just timed: min-relax bfs distances must be
 bitwise identical across streamed / all-resident / plain in-memory
@@ -40,7 +53,7 @@ def run():
     from repro.graphs import generators as gen
 
     src, dst, n = gen.rmat(11, 13, seed=7)
-    g = from_coo(src, dst, n, block_size=128)
+    g = from_coo(src, dst, n, block_size=128, build_csc=True)
     store = tempfile.mkdtemp(prefix="ooc_store_")
     rows = []
     try:
@@ -90,6 +103,43 @@ def run():
                     f"hits={stats.buffer_hits};ratio={ratio:.0f}x;"
                     f"equal={int(exact)}",
                     dict(stats.as_dict(), **extra)))
+            if aname == "bfs":
+                fused_labels, fused_stats = out["streamed"][:2]
+
+        # eager (per-round) streamed bfs: fusion must change host syncs
+        # only — same labels, same streamed work
+        tg = open_graph(store, resident_shards=2)
+        labels, stats = bfs.bfs_dd_sparse(tg, 0, fused=False)
+        eager_exact = bool(
+            (np.asarray(labels) == fused_labels).all()
+            and stats.h2d_bytes == fused_stats.h2d_bytes
+            and stats.shards_streamed == fused_stats.shards_streamed
+            and stats.edges_touched == fused_stats.edges_touched)
+        us = time_call(lambda: bfs.bfs_dd_sparse(tg, 0, fused=False)[0])
+        rows.append(row(
+            "outofcore/bfs_eager_streamed", us,
+            f"h2d_kb={stats.h2d_bytes / 1024:.0f};"
+            f"streamed={stats.shards_streamed};equal={int(eager_exact)}",
+            dict(stats.as_dict(),
+                 bitwise_equal=int(eager_exact),
+                 budget_ratio=tg.csr_bytes / max(tg.resident_budget, 1),
+                 shard_bytes=tg.shard_bytes)))
+
+        # direction-optimizing bfs out-of-core: pull rounds stream the
+        # persisted CSC mirror, labels bitwise equal to the resident run
+        ref_dirop = np.asarray(bfs.bfs_dirop(g, 0)[0])
+        tg = open_graph(store, resident_shards=2)
+        labels, stats = bfs.bfs_dirop(tg, 0)
+        dirop_exact = bool((np.asarray(labels) == ref_dirop).all())
+        us = time_call(lambda: bfs.bfs_dirop(tg, 0)[0])
+        rows.append(row(
+            "outofcore/dirop_streamed", us,
+            f"h2d_kb={stats.h2d_bytes / 1024:.0f};"
+            f"pulls={stats.pull_rounds};equal={int(dirop_exact)}",
+            dict(stats.as_dict(),
+                 bitwise_equal=int(dirop_exact),
+                 budget_ratio=tg.csr_bytes / max(tg.resident_budget, 1),
+                 shard_bytes=tg.shard_bytes)))
     finally:
         shutil.rmtree(store, ignore_errors=True)
     return rows

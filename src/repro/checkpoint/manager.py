@@ -347,11 +347,13 @@ def _load_shard_arrays(path: str, names=("src", "dst", "w")):
     return tuple(out)
 
 
-def _shard_path(directory: str, sid: int) -> str:
-    return os.path.join(directory, f"shard_{sid:06d}.npz")
+def _shard_path(directory: str, sid: int, direction: str = "csr") -> str:
+    prefix = "cscshard" if direction == "csc" else "shard"
+    return os.path.join(directory, f"{prefix}_{sid:06d}.npz")
 
 
-def save_graph(g, directory: str, nshards: int = 8) -> str:
+def save_graph(g, directory: str, nshards: int = 8,
+               build_csc: Optional[bool] = None) -> str:
     """Persist a graph as a tiered shard store: one uncompressed ``.npz``
     per edge shard, a ``vertices.npz`` for the O(n) arrays, and
     ``graph_manifest.json`` written **last** as the commit record.
@@ -370,11 +372,27 @@ def save_graph(g, directory: str, nshards: int = 8) -> str:
     labels (the checksum is over what the store SHOULD hold: it is
     computed from the in-memory arrays before they are staged to disk,
     so a write torn under ``save_graph`` itself is also caught on read).
+
+    ``build_csc`` controls the optional in-direction cut: ``None`` (the
+    default) persists a CSC mirror whenever the source graph carries one,
+    ``True`` requires it (``from_coo(..., build_csc=True)``), ``False``
+    drops it.  CSC shards land as ``cscshard_NNNNNN.npz`` files sharing
+    the manifest + CRC scheme (a ``"csc"`` manifest block records sizes
+    and checksums), and the O(n) ``in_deg`` rides in ``vertices.npz`` —
+    ``open_graph`` then streams ``pull_dense`` / ``bfs_dirop`` out of
+    core.  The format stays v2: a store without the block simply has no
+    mirror.
     """
     from ..core.tiered import TieredGraph, shard_crc, tier_graph
 
     if not isinstance(g, TieredGraph):
-        g = tier_graph(g, nshards)
+        want_csc = g.has_csc if build_csc is None else bool(build_csc)
+        g = tier_graph(g, nshards, build_csc=want_csc)
+    elif build_csc and not g.has_csc:
+        raise ValueError(
+            "build_csc=True but this TieredGraph was cut without a CSC "
+            "mirror; re-cut with tier_graph(..., build_csc=True)")
+    save_csc = g.has_csc and build_csc is not False
     os.makedirs(directory, exist_ok=True)
     for f in os.listdir(directory):
         if f.endswith(".tmp"):
@@ -382,20 +400,22 @@ def save_graph(g, directory: str, nshards: int = 8) -> str:
                 os.remove(os.path.join(directory, f))
             except OSError:
                 pass
-    crcs = []
-    for sid in range(g.nshards):
-        src, dst, w = g._host[sid]
-        crcs.append(shard_crc(src, dst, w))
-        final = _shard_path(directory, sid)
-        tmp = final + ".tmp"
-        with open(tmp, "wb") as f:
-            np.savez(f, src=np.asarray(src), dst=np.asarray(dst),
-                     w=np.asarray(w))  # savez (not _compressed): mappable
-        os.replace(tmp, final)
-    vtmp = os.path.join(directory, "vertices.npz.tmp")
-    with open(vtmp, "wb") as f:
-        np.savez(f, out_deg=np.asarray(g.out_deg, np.int32))
-    os.replace(vtmp, os.path.join(directory, "vertices.npz"))
+
+    def _write_shards(host, direction):
+        crcs = []
+        for sid in range(g.nshards):
+            src, dst, w = host[sid]
+            crcs.append(shard_crc(src, dst, w))
+            final = _shard_path(directory, sid, direction)
+            tmp = final + ".tmp"
+            with open(tmp, "wb") as f:
+                np.savez(f, src=np.asarray(src), dst=np.asarray(dst),
+                         w=np.asarray(w))  # savez (not _compressed): mappable
+            os.replace(tmp, final)
+        return crcs
+
+    crcs = _write_shards(g._host, "csr")
+    vertices = {"out_deg": np.asarray(g.out_deg, np.int32)}
     manifest = {
         "format": _GRAPH_FORMAT,
         "n": g.n, "m": g.m, "n_pad": g.n_pad,
@@ -408,6 +428,16 @@ def save_graph(g, directory: str, nshards: int = 8) -> str:
         "shard_shape": [g.epd],
         "time": time.time(),
     }
+    if save_csc:
+        manifest["csc"] = {
+            "shard_sizes": [int(x) for x in g.in_shard_sizes],
+            "shard_crcs": _write_shards(g._csc_host, "csc"),
+        }
+        vertices["in_deg"] = np.asarray(g.in_deg, np.int32)
+    vtmp = os.path.join(directory, "vertices.npz.tmp")
+    with open(vtmp, "wb") as f:
+        np.savez(f, **vertices)
+    os.replace(vtmp, os.path.join(directory, "vertices.npz"))
     mtmp = os.path.join(directory, GRAPH_MANIFEST + ".tmp")
     with open(mtmp, "w") as f:
         json.dump(manifest, f)
@@ -437,13 +467,23 @@ def open_graph(directory: str, resident_shards: int = 2,
       frontier that never visits a rotted shard never pays for it.
     * ``"open"``  — eagerly scan every shard now; a corrupt one raises
       ``ShardCorruptError`` before any run starts (fsck mode).
+    * ``"require"`` — like ``"open"``, but additionally REFUSE a store
+      that carries no checksums at all (a v1 manifest): integrity cannot
+      be demonstrated, so raise instead of silently opening unverified.
     * ``"off"``   — trust the store (benchmarking the verify cost).
+
+    A v1 (checksum-less) store under ``"fetch"``/``"open"`` opens, but
+    emits a ``UserWarning`` and the returned graph records
+    ``verified=False`` — nothing was or ever will be checked.
     """
+    import warnings
+
     from ..core.faultio import ShardCorruptError
     from ..core.tiered import TieredGraph, shard_crc
 
-    if verify not in ("fetch", "open", "off"):
-        raise ValueError(f"verify must be fetch|open|off, got {verify!r}")
+    if verify not in ("fetch", "open", "require", "off"):
+        raise ValueError(
+            f"verify must be fetch|open|require|off, got {verify!r}")
     mpath = os.path.join(directory, GRAPH_MANIFEST)
     if not os.path.exists(mpath):
         raise FileNotFoundError(
@@ -454,41 +494,74 @@ def open_graph(directory: str, resident_shards: int = 2,
     if man.get("format") not in _GRAPH_FORMATS:
         raise ValueError(f"unknown graph store format {man.get('format')!r}")
     nshards, epd = int(man["nshards"]), int(man["epd"])
-    crcs = man.get("shard_crcs")  # absent on v1 stores → unverified
+    crcs = man.get("shard_crcs")  # absent on v1 stores → unverifiable
+    if crcs is None:
+        if verify == "require":
+            raise ValueError(
+                f"graph store {directory} has a v1 manifest with no "
+                "per-shard checksums; verify='require' refuses to open an "
+                "unverifiable store — re-run save_graph to upgrade it, or "
+                "open with verify='fetch' to proceed unverified")
+        if verify != "off":
+            warnings.warn(
+                f"graph store {directory} has a v1 manifest with no "
+                f"per-shard checksums: opening UNVERIFIED (verify="
+                f"{verify!r} has nothing to check); re-run save_graph to "
+                "record integrity records", UserWarning, stacklevel=2)
     dtypes = tuple(man.get("shard_dtypes", _SHARD_DTYPES))
-    shards = []
-    for sid in range(nshards):
-        path = _shard_path(directory, sid)
-        if not os.path.exists(path):
-            raise ValueError(
-                f"graph store {directory} is incomplete: manifest promises "
-                f"{nshards} shards but {os.path.basename(path)} is missing")
-        try:
-            src, dst, w = _load_shard_arrays(path)
-        except Exception as e:  # zip/npy parse failures → typed, named
-            raise ShardCorruptError(
-                f"graph store {directory} shard {sid} is unreadable "
-                f"({type(e).__name__}: {e}) — torn or truncated write; "
-                "restore the shard or re-run save_graph") from e
-        if not (src.shape == dst.shape == w.shape == (epd,)):
-            raise ValueError(
-                f"graph store {directory} shard {sid} has shape "
-                f"{src.shape}/{dst.shape}/{w.shape}, manifest says ({epd},)")
-        got_dt = (str(src.dtype), str(dst.dtype), str(w.dtype))
-        if got_dt != dtypes:
-            raise ValueError(
-                f"graph store {directory} shard {sid} has dtypes {got_dt}, "
-                f"manifest says {dtypes}")
-        if verify == "open" and crcs is not None:
-            got = shard_crc(src, dst, w)
-            if got != int(crcs[sid]):
+    eager_scan = verify in ("open", "require")
+
+    def _read_cut(direction, cut_crcs):
+        shards = []
+        for sid in range(nshards):
+            path = _shard_path(directory, sid, direction)
+            if not os.path.exists(path):
+                raise ValueError(
+                    f"graph store {directory} is incomplete: manifest "
+                    f"promises {nshards} {direction} shards but "
+                    f"{os.path.basename(path)} is missing")
+            try:
+                src, dst, w = _load_shard_arrays(path)
+            except Exception as e:  # zip/npy parse failures → typed, named
                 raise ShardCorruptError(
-                    f"graph store {directory} shard {sid}: crc32 "
-                    f"{got:#010x} != manifest {int(crcs[sid]):#010x} — "
-                    "bit-rot or torn write; restore from a replica or "
-                    "re-run save_graph")
-        shards.append((src, dst, w))
-    out_deg = np.load(os.path.join(directory, "vertices.npz"))["out_deg"]
+                    f"graph store {directory} {direction} shard {sid} is "
+                    f"unreadable ({type(e).__name__}: {e}) — torn or "
+                    "truncated write; restore the shard or re-run "
+                    "save_graph") from e
+            if not (src.shape == dst.shape == w.shape == (epd,)):
+                raise ValueError(
+                    f"graph store {directory} {direction} shard {sid} has "
+                    f"shape {src.shape}/{dst.shape}/{w.shape}, manifest "
+                    f"says ({epd},)")
+            got_dt = (str(src.dtype), str(dst.dtype), str(w.dtype))
+            if got_dt != dtypes:
+                raise ValueError(
+                    f"graph store {directory} {direction} shard {sid} has "
+                    f"dtypes {got_dt}, manifest says {dtypes}")
+            if eager_scan and cut_crcs is not None:
+                got = shard_crc(src, dst, w)
+                if got != int(cut_crcs[sid]):
+                    raise ShardCorruptError(
+                        f"graph store {directory} {direction} shard {sid}: "
+                        f"crc32 {got:#010x} != manifest "
+                        f"{int(cut_crcs[sid]):#010x} — bit-rot or torn "
+                        "write; restore from a replica or re-run "
+                        "save_graph")
+            shards.append((src, dst, w))
+        return shards
+
+    shards = _read_cut("csr", crcs)
+    vertices = np.load(os.path.join(directory, "vertices.npz"))
+    csc_kw = {}
+    csc = man.get("csc")
+    if csc is not None:
+        in_crcs = csc.get("shard_crcs")
+        csc_kw = dict(
+            csc_host=_read_cut("csc", in_crcs),
+            in_shard_sizes=np.asarray(csc["shard_sizes"], np.int64),
+            in_shard_crcs=in_crcs,
+            in_deg=vertices["in_deg"],
+        )
     if resident_bytes is not None:
         resident_shards = max(2, int(resident_bytes) // (epd * 12))
     return TieredGraph(
@@ -496,7 +569,9 @@ def open_graph(directory: str, resident_shards: int = 2,
         block_size=int(man["block_size"]), nshards=nshards, epd=epd,
         vtx_bounds=np.asarray(man["vtx_bounds"], np.int64),
         shard_sizes=np.asarray(man["shard_sizes"], np.int64),
-        host_shards=shards, out_deg=out_deg,
+        host_shards=shards, out_deg=vertices["out_deg"],
         resident_shards=resident_shards,
         shard_crcs=crcs, verify_checksums=(verify != "off"),
+        verified=(verify != "off"),
+        **csc_kw,
     )

@@ -12,12 +12,16 @@ Distances are float32 (exact for any graph diameter we can hold).
 
 from __future__ import annotations
 
+from functools import partial
+
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from .. import frontier as fr
 from .. import operators as ops
-from ..engine import SparseLadderEngine, RunStats, run_dense, run_host
+from ..engine import (SparseLadderEngine, RunStats, run_dense,
+                      run_streamed, _mask_cond, _mask_active)
 from ..graph import Graph
 
 INF = jnp.float32(jnp.finfo(jnp.float32).max)
@@ -28,36 +32,53 @@ def _init_dist(g: Graph, src: int):
     return dist.at[src].set(0.0)
 
 
+# Streamed (out-of-core) steps take the graph container as an argument —
+# run_streamed hands them either the TieredGraph (eager rounds) or a
+# StagedShards set (inside a fused stretch) — and live at module level so
+# the jitted stretch's trace cache keys on stable identities.
+
+
+def _topo_step(gr, state):
+    dist, _ = state
+    new = ops.push_dense(gr, dist, gr.valid_vertex_mask(), dist, kind="min",
+                         use_weight=True)
+    return new, jnp.any(new != dist)
+
+
+def _topo_cond(state):
+    return state[1]
+
+
+def _topo_active(gr, state):
+    return gr.valid_vertex_mask()
+
+
+def _dd_step(gr, state):
+    dist, mask = state
+    new = ops.push_dense(gr, dist, mask, dist, kind="min", use_weight=True)
+    return new, ops.updated_mask(dist, new)
+
+
 def bfs_topo(g: Graph, src: int, max_rounds: int = 100_000):
     """Every round relaxes *all* edges (operator applied to every vertex)."""
     dist0 = _init_dist(g, src)
-    all_active = g.valid_vertex_mask()
-
-    # BFS relaxes hops: message is dist[src] + 1.  We reuse the weighted relax
-    # with unit edge weights (builders set edge_w = 1 for unweighted graphs).
-    def step_correct(state):
-        dist, _ = state
-        new = ops.push_dense(
-            g, dist, all_active, dist, kind="min", use_weight=True
-        )
-        return new, jnp.any(new != dist)
+    state0 = (dist0, jnp.bool_(True))
 
     io0 = _io_snapshot(g)
-    rounds, (dist, _) = _run_maybe_tiered(
-        g, step_correct, (dist0, jnp.bool_(True)), lambda s: s[1], max_rounds
-    )
+    if getattr(g, "is_tiered", False):
+        rounds, (dist, _) = run_streamed(
+            g, _topo_step, state0, _topo_cond, _topo_active, max_rounds)
+    else:
+        # BFS relaxes hops: message is dist[src] + 1.  We reuse the
+        # weighted relax with unit edge weights (builders set edge_w = 1
+        # for unweighted graphs).
+        rounds, (dist, _) = run_dense(
+            lambda s: _topo_step(g, s), state0, _topo_cond, max_rounds)
     return dist, _dense_stats(g, rounds, io0)
 
 
 def _io_snapshot(g):
     return g.io.snapshot() if getattr(g, "is_tiered", False) else None
-
-
-def _run_maybe_tiered(g, step, state, cond, max_rounds):
-    """``run_dense`` — or the eager ``run_host`` when ``g`` streams edge
-    shards from host state and the step cannot be traced."""
-    runner = run_host if getattr(g, "is_tiered", False) else run_dense
-    return runner(step, state, cond, max_rounds)
 
 
 def _dense_stats(g, rounds, io0=None) -> RunStats:
@@ -79,15 +100,15 @@ def bfs_dd_dense(g: Graph, src: int, max_rounds: int = 100_000):
     dist0 = _init_dist(g, src)
     mask0 = fr.dense_from_indices(jnp.array([src]), g.n_pad).mask
 
-    def step(state):
-        dist, mask = state
-        new = ops.push_dense(g, dist, mask, dist, kind="min", use_weight=True)
-        return new, ops.updated_mask(dist, new)
-
     io0 = _io_snapshot(g)
-    rounds, (dist, _) = _run_maybe_tiered(
-        g, step, (dist0, mask0), lambda s: jnp.any(s[1]), max_rounds
-    )
+    if getattr(g, "is_tiered", False):
+        rounds, (dist, _) = run_streamed(
+            g, _dd_step, (dist0, mask0), _mask_cond, _mask_active,
+            max_rounds)
+    else:
+        rounds, (dist, _) = run_dense(
+            lambda s: _dd_step(g, s), (dist0, mask0), _mask_cond,
+            max_rounds)
     return dist, _dense_stats(g, rounds, io0)
 
 
@@ -132,6 +153,79 @@ def _in_degrees(g) -> jax.Array:
     return counted.at[g.sentinel].set(0)
 
 
+@partial(jax.jit, static_argnames=("n", "m", "alpha", "beta", "nshards"))
+def _dirop_scalars(dist, mask, pull_prev, visited, out_deg, in_deg, owner,
+                   *, n, m, alpha, beta, nshards):
+    """Everything the streamed dirop's host loop needs for one round, in
+    one fused device computation fetched in a single transfer:
+    ``(frontier_count, pull?, direction_mass, scan_mass, live_shards)``.
+    The α/β decision is computed ON DEVICE with the same f32 expressions
+    as ``operators.direction_choice`` inside the resident trace, so the
+    streamed run takes bitwise-identical direction switches."""
+    fcount_i = jnp.sum(mask.astype(jnp.int32))
+    fcount = fcount_i.astype(jnp.float32)
+    out_mass = jnp.sum(jnp.where(mask, out_deg, 0)).astype(jnp.float32)
+    in_mass = jnp.sum(jnp.where(mask, in_deg, 0)).astype(jnp.float32)
+    unvisited = jnp.maximum(jnp.float32(m) - visited, 0.0)
+    go_pull = out_mass > unvisited / alpha
+    go_push = fcount < n / beta
+    pull = jnp.where(pull_prev, ~go_push, go_pull)
+    scan_mass = jnp.sum(jnp.where(dist == INF, in_deg, 0)).astype(jnp.int32)
+    act = mask & (out_deg > 0)
+    per = jnp.zeros((nshards,), jnp.int32).at[owner].add(act.astype(jnp.int32))
+    return fcount_i, pull, jnp.where(pull, in_mass, out_mass), scan_mass, per > 0
+
+
+def _bfs_dirop_streamed(g, src: int, max_rounds: int, alpha: float,
+                        beta: float):
+    """Direction-optimizing BFS out-of-core: push rounds stream the live
+    CSR shards, pull rounds stream the whole CSC mirror (the bottom-up
+    scan is dense by nature) — both through the same bounded pool.  One
+    blocking fetch per round (``_dirop_scalars``) covers termination, the
+    α/β switch, the frontier's direction mass, the pull round's in-degree
+    scan mass, and the push schedule.  ``visited_edges`` accumulates on
+    the host in float32, the same IEEE adds the resident while_loop
+    carries, so direction switches — and with them labels and the PR 7
+    accounting convention (push = m, pull = unvisited in-degree mass) —
+    match the resident ``bfs_dirop`` exactly."""
+    dist = _init_dist(g, src)
+    mask = fr.dense_from_indices(jnp.array([src]), g.n_pad).mask
+    io0 = g.io.snapshot()
+    visited = np.float32(0.0)
+    pull_prev = False
+    work = pulls = rounds = 0
+    while rounds < max_rounds:
+        fcount, pull, mass_inc, scan_mass, live = jax.device_get(
+            _dirop_scalars(dist, mask, jnp.bool_(pull_prev),
+                           jnp.float32(visited), g.out_deg, g.in_deg,
+                           g.owner, n=g.n, m=g.m, alpha=float(alpha),
+                           beta=float(beta), nshards=g.nshards))
+        if int(fcount) == 0:
+            break
+        pull = bool(pull)
+        if pull:
+            new = ops.pull_dense(g, dist, mask, dist, kind="min",
+                                 use_weight=True)
+            work += int(scan_mass)
+        else:
+            g.set_live_hint(np.asarray(live))
+            new = ops.push_dense(g, dist, mask, dist, kind="min",
+                                 use_weight=True)
+            work += g.m
+        dist, mask = new, ops.updated_mask(dist, new)
+        visited = np.float32(visited + mass_inc)
+        pull_prev = pull
+        pulls += int(pull)
+        rounds += 1
+    stats = RunStats.from_graph(g, relaxes=rounds, rounds=rounds,
+                                edges_touched=work, dense_rounds=rounds,
+                                pull_rounds=pulls)
+    # edges_touched follows Beamer's work convention here, not relaxed
+    # edge slots — fold only the streaming/IO counters
+    g.io.fold_delta(stats, io0, include_edges=False)
+    return dist, stats
+
+
 def bfs_dirop(
     g: Graph, src: int, max_rounds: int = 100_000, alpha: float = 14.0, beta: float = 24.0
 ):
@@ -150,6 +244,8 @@ def bfs_dirop(
     pull-round count in ``RunStats.pull_rounds``.
     """
     assert g.has_csc
+    if getattr(g, "is_tiered", False):
+        return _bfs_dirop_streamed(g, src, max_rounds, alpha, beta)
     dist0 = _init_dist(g, src)
     mask0 = fr.dense_from_indices(jnp.array([src]), g.n_pad).mask
     total_edges = jnp.float32(g.m)

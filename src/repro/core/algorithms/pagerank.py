@@ -10,11 +10,13 @@
 
 from __future__ import annotations
 
+from functools import lru_cache
+
 import jax
 import jax.numpy as jnp
 
 from .. import operators as ops
-from ..engine import RunStats, run_dense, run_host
+from ..engine import RunStats, run_dense, run_host, run_streamed
 from ..graph import Graph
 
 
@@ -24,6 +26,11 @@ def pr_pull(
     tol: float = 1e-6,
     max_iters: int = 100,
 ):
+    """Power-iteration pull PageRank.  On a tiered (out-of-core) graph
+    with a CSC mirror the rounds dispatch eagerly (``run_host``) — every
+    iteration is a dense pull, streaming the whole in-edge cut through
+    the buffer pool; float sums associate per shard, so results are
+    allclose (not bitwise) to the resident run."""
     assert g.has_csc
     n = jnp.float32(g.n)
     valid = g.valid_vertex_mask()
@@ -42,11 +49,46 @@ def pr_pull(
         resid = jnp.sum(jnp.abs(new - rank))
         return new, resid
 
-    rounds, (rank, resid) = run_dense(
+    tiered = getattr(g, "is_tiered", False)
+    io0 = g.io.snapshot() if tiered else None
+    runner = run_host if tiered else run_dense
+    rounds, (rank, resid) = runner(
         step, (rank0, jnp.float32(jnp.inf)), lambda s: s[1] > tol, max_iters
     )
-    return rank, RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
-                          edges_touched=int(rounds) * g.m, dense_rounds=int(rounds))
+    stats = RunStats.from_graph(g, relaxes=int(rounds), rounds=int(rounds),
+                                edges_touched=0 if tiered else int(rounds) * g.m,
+                                dense_rounds=int(rounds))
+    if tiered:
+        g.io.fold_delta(stats, io0)
+    return rank, stats
+
+
+@lru_cache(maxsize=None)
+def _pr_streamed_fns(damping: float, tol: float):
+    """(step, cond, active) triple for the streamed pr_push — cached per
+    (damping, tol) so the jitted staged stretch's trace cache keys on
+    stable function identities.  The step recomputes ``valid``/``outdeg``
+    from the container it is handed (TieredGraph or StagedShards carry
+    the same device arrays), so it traces cleanly inside the stretch."""
+    def step(gr, state):
+        rank, resid = state
+        outdeg = jnp.maximum(gr.out_deg.astype(jnp.float32), 1.0)
+        active = resid > tol
+        rank = rank + jnp.where(active, resid, 0.0)
+        push_val = jnp.where(active, damping * resid / outdeg, 0.0)
+        added = ops.push_dense(
+            gr, push_val, active, jnp.zeros_like(resid), kind="add",
+            use_weight=False)
+        resid = jnp.where(active, 0.0, resid) + added
+        return rank, resid
+
+    def cond(state):
+        return jnp.any(state[1] > tol)
+
+    def active_fn(gr, state):
+        return state[1] > tol
+
+    return step, cond, active_fn
 
 
 def pr_push(
@@ -82,17 +124,19 @@ def pr_push(
         resid = jnp.where(active, 0.0, resid) + added
         return rank, resid
 
-    # a tiered graph streams edge shards from host state inside the step,
-    # so rounds dispatch eagerly (run_host) and the edge / h2d accounting
-    # comes from the graph's stream counters instead of rounds·m; the
-    # eager path also carries the crash-recovery hooks (checkpointer +
-    # the graph's attached fault injector)
+    # a tiered graph streams edge shards from host state, so rounds
+    # dispatch through run_streamed: stable residual-active shard sets
+    # fuse into device-resident stretches, the edge / h2d accounting comes
+    # from the graph's stream counters instead of rounds·m, and the same
+    # host boundaries carry the crash-recovery hooks (checkpointer; an
+    # attached fault injector forces the per-round eager path)
     tiered = getattr(g, "is_tiered", False)
     io0 = g.io.snapshot() if tiered else None
     if tiered:
-        rounds, (rank, resid) = run_host(
-            step, (rank0, resid0), lambda s: jnp.any(s[1] > tol), max_iters,
-            checkpointer=checkpointer, fault=getattr(g, "fault", None))
+        sstep, scond, sactive = _pr_streamed_fns(float(damping), float(tol))
+        rounds, (rank, resid) = run_streamed(
+            g, sstep, (rank0, resid0), scond, sactive, max_iters,
+            checkpointer=checkpointer)
     else:
         rounds, (rank, resid) = run_dense(
             step, (rank0, resid0), lambda s: jnp.any(s[1] > tol), max_iters)

@@ -59,11 +59,12 @@ unsharded runs).
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
+from functools import lru_cache, partial
 from typing import Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from . import frontier as fr
 from . import operators as ops
@@ -223,6 +224,158 @@ def run_host(
         if checkpointer is not None:
             checkpointer.maybe_save(state, rounds)
     return rounds, state
+
+
+# ---------------------------------------------------------------------------
+# Streamed execution (out-of-core tiered graphs)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("step", "cond", "active", "sub", "det"))
+def _staged_stretch(sg, state, limit, *, step, cond, active, sub, det):
+    """Run consecutive rounds over a pre-staged live shard set
+    (``tiered.StagedShards``) as one device-resident band-exit while_loop
+    — the streamed twin of ``_sparse_stretch`` / ``_dense_stretch``.
+
+    The band is live-set stability (``frontier.live_stable``): the loop
+    keeps executing while the frontier stays alive AND its live-shard set
+    still equals the staged set, and exits the moment the host scheduler
+    would stream a different shard schedule.  The ``first`` flag
+    guarantees the round the host staged for always executes (its live
+    set equals the staged set by construction).  Returns
+    ``(state, rounds_run)``; the caller fetches the round count together
+    with the NEXT round's scalars in one transfer.
+    """
+    with ops.substrate_scope(sub), ops.deterministic_add_scope(det):
+        def keep(c):
+            first, st, k = c
+            return ((k < limit) & cond(st)
+                    & (first | fr.live_stable(sg, active(sg, st))))
+
+        def body(c):
+            _, st, k = c
+            return jnp.bool_(False), step(sg, st), k + 1
+
+        _, state, k = jax.lax.while_loop(
+            keep, body, (jnp.bool_(True), state, jnp.int32(0)))
+        return state, k
+
+
+@lru_cache(maxsize=None)
+def _streamed_step_for(dense_fn):
+    """Adapt an engine ``(g, labels, mask) -> (labels, mask)`` dense step
+    to ``run_streamed``'s ``(g, state) -> state`` shape.  Cached so the
+    adapter has stable identity per dense step — ``_staged_stretch`` jits
+    with the step as a static argument, and a fresh closure per run would
+    defeat the trace cache."""
+    def step(gr, state):
+        labels, mask = state
+        return dense_fn(gr, labels, mask)
+    return step
+
+
+def _mask_cond(state):
+    """Termination for (labels, mask) streamed states: frontier alive."""
+    return jnp.any(state[1])
+
+
+def _mask_active(gr, state):
+    """Schedule mask for (labels, mask) streamed states."""
+    return state[1]
+
+
+def run_streamed(
+    g,
+    step: Callable,    # (graph_or_staged, state) -> state
+    state,
+    cond: Callable,    # (state,) -> device bool
+    active: Callable,  # (graph_or_staged, state) -> (n_pad,) bool mask
+    max_rounds: int,
+    *,
+    checkpointer=None,
+    fused: bool = True,
+    on_rounds: Callable = None,  # (k, live) host callback per retired batch
+    ckpt_stats: Callable = None,
+):
+    """Generic runner for a ``tiered.TieredGraph``: frontier-driven shard
+    streaming, with device-resident rung-fused stretches when the live
+    shard set is stable.
+
+    Each trip fetches ``(cond, frontier_count, live_shard_mask)`` in ONE
+    transfer.  When ``fused`` and the live set fits the buffer pool, the
+    set is pre-staged (``g.stage``) and the next rounds run as one jitted
+    ``_staged_stretch`` — its round count rides back with the NEXT trip's
+    scalars, so a stretch costs the same single blocking fetch an eager
+    round does and host syncs scale with live-set *switches*.  Rounds
+    whose live set outgrows the pool (the LRU pool restreams by design)
+    fall back to one eager round, as does the whole run when a fault
+    injector is attached (kill drills need the per-round ``"round"`` tick)
+    or ``fused=False`` (the measurable per-round baseline).  Labels are
+    bitwise identical across all three regimes: a staged stretch folds the
+    same shards in the same ascending order as the eager rounds it
+    replaces (``tests/test_tiered_properties.py`` pins this).
+
+    ``on_rounds(k, live)`` reports every retired batch of ``k`` rounds
+    that all ran over schedule ``live`` — exact per-round classification,
+    since a stretch exits on any live-set change.  Returns
+    ``(rounds, state)``; ``checkpointer`` snapshots at the same host
+    boundaries the syncs already pay for.
+    """
+    state, rnd = resume_run(checkpointer, state)
+    fault = getattr(g, "fault", None)
+    use_fused = fused and fault is None
+    sub, det = ops.get_substrate(), ops.get_deterministic_add()
+
+    def settle(k, live):
+        nonlocal rnd
+        k = int(k)
+        g.charge_staged_rounds(k, live)
+        if on_rounds is not None:
+            on_rounds(k, live)
+        rnd += k
+        if checkpointer is not None:
+            checkpointer.maybe_save(
+                state, rnd, None if ckpt_stats is None else ckpt_stats())
+
+    pending = None  # (rounds_run device int32, live) of the stretch in flight
+    while rnd < max_rounds:
+        scal = (cond(state), *g.round_live(active(g, state)))
+        if pending is None:
+            go, count, live = jax.device_get(scal)
+        else:
+            # ONE blocking fetch settles the in-flight stretch AND picks
+            # the next schedule
+            go, count, live, k = jax.device_get((*scal, pending[0]))
+            settle(k, pending[1])
+            pending = None
+            if rnd >= max_rounds:
+                break
+        if not bool(go) or int(count) == 0:
+            break
+        live = np.asarray(live)
+        sg = g.stage(live) if use_fused else None
+        if sg is None:
+            # eager round: live set dead-ends or outgrows the pool, the
+            # baseline was requested, or a fault plan needs round ticks
+            if fault is not None:
+                fault.tick("round", key=rnd)
+            g.set_live_hint(live)
+            state = step(g, state)
+            rnd += 1
+            if on_rounds is not None:
+                on_rounds(1, live)
+            if checkpointer is not None:
+                checkpointer.maybe_save(
+                    state, rnd, None if ckpt_stats is None else ckpt_stats())
+        else:
+            state, k_dev = _staged_stretch(
+                sg, state, jnp.int32(max_rounds - rnd), step=step, cond=cond,
+                active=active, sub=sub, det=det)
+            pending = (k_dev, live)
+    if pending is not None:
+        k, live = jax.device_get(pending[0]), pending[1]
+        settle(k, live)
+    return rnd, state
 
 
 # ---------------------------------------------------------------------------
@@ -411,47 +564,42 @@ class SparseLadderEngine:
 
     def _run_streamed(self, labels, mask, max_rounds: int,
                       checkpointer=None):
-        """Per-round dispatch for a ``tiered.TieredGraph`` — the engine's
-        resident-budget path: the CSR lives behind a bounded pool of
-        device shard buffers, so steps cannot fuse into device-resident
-        while_loops (each round's relax streams shards from host state).
-        Instead the engine fetches ``(frontier_count, live_shard_mask)``
-        in ONE transfer per round (``round_live`` — the rung-scalar
-        analogue) and hands the schedule down via ``set_live_hint``; the
-        graph then interleaves each shard's async H2D prefetch with the
-        previous shard's relax.  Rounds that leave shards idle count as
-        sparse (shard-granular work-efficiency ⇒ bandwidth-efficiency);
-        rounds touching every shard count as dense.  Stream deltas fold
-        into ``h2d_bytes`` / ``shards_streamed`` / ``buffer_hits`` /
+        """Streamed dispatch for a ``tiered.TieredGraph`` — the engine's
+        resident-budget path, delegated to the generic ``run_streamed``:
+        the CSR lives behind a bounded pool of device shard buffers, the
+        runner fetches ``(cond, frontier_count, live_shard_mask)`` in ONE
+        transfer per trip (``round_live`` — the rung-scalar analogue), and
+        stable live sets that fit the pool fuse into device-resident
+        stretches (``_staged_stretch``).  ``self.fused=False`` keeps the
+        one-eager-round-per-trip baseline.  Rounds that leave shards idle
+        count as sparse (shard-granular work-efficiency ⇒
+        bandwidth-efficiency); rounds touching every shard count as dense
+        — a stretch's rounds all share one schedule, so the
+        classification stays per-round exact.  Stream deltas fold into
+        ``h2d_bytes`` / ``shards_streamed`` / ``buffer_hits`` /
         ``edges_touched`` at the end.
 
         This is also the crash-recovery regime (the paper's months-lived
         persistent store): ``checkpointer`` snapshots ``(labels, mask)``
-        every K rounds and resumes bitwise, and the graph's attached
-        ``FaultInjector`` ticks the ``"round"`` site here so kill drills
-        land at an exact round."""
+        at the host boundaries the syncs already pay for and resumes
+        bitwise, and a graph with an attached ``FaultInjector`` runs
+        eager so kill drills land at an exact round."""
         g = self.g
         self.stats.substrate = ops.get_substrate()
         io0 = g.io.snapshot()
-        fault = getattr(g, "fault", None)
-        (labels, mask), rnd = resume_run(checkpointer, (labels, mask))
-        while rnd < max_rounds:
-            count, live = jax.device_get(g.round_live(mask))
-            if int(count) == 0:
-                break
-            if fault is not None:
-                fault.tick("round", key=rnd)
-            self.stats.rounds += 1
+
+        def on_rounds(k, live):
+            self.stats.rounds += k
             if int(live.sum()) < g.nshards:
-                self.stats.sparse_rounds += 1
+                self.stats.sparse_rounds += k
             else:
-                self.stats.dense_rounds += 1
-            g.set_live_hint(live)
-            labels, mask = self._dense_fn(g, labels, mask)
-            rnd += 1
-            if checkpointer is not None:
-                checkpointer.maybe_save((labels, mask), rnd,
-                                        self.stats.as_dict())
+                self.stats.dense_rounds += k
+
+        _, (labels, mask) = run_streamed(
+            g, _streamed_step_for(self._dense_fn), (labels, mask),
+            _mask_cond, _mask_active, max_rounds,
+            checkpointer=checkpointer, fused=self.fused,
+            on_rounds=on_rounds, ckpt_stats=self.stats.as_dict)
         g.io.fold_delta(self.stats, io0)
         return labels, mask
 

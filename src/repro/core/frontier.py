@@ -229,6 +229,19 @@ def batched_round_scalars(g, fmat: jax.Array):
     return total, ucount, umass, alive
 
 
+def live_stable(sg, mask: jax.Array) -> jax.Array:
+    """Band predicate of the streamed fused stretch
+    (``engine._staged_stretch``): True while ``mask``'s live-shard set
+    still equals the staged set ``sg`` was built from — the device-side
+    re-derivation of the host scheduler's decision, exactly like
+    ``sparse_band`` / ``dense_band`` re-derive the ladder's.  The moment a
+    round would need a shard that is not staged (or stops needing one that
+    is — the eager path would then stream/charge a different schedule),
+    the stretch exits and the host restages."""
+    _, live = sg.round_live(mask)
+    return jnp.all(live == sg.live)
+
+
 def dense_band(scalars, sparse_cutoff: int) -> jax.Array:
     """True while the host dispatcher would keep picking the dense
     fallback: frontier alive and median mass above the sparse cutoff.

@@ -211,10 +211,18 @@ def pull_dense(
     (in-edges are grouped by destination, ``indices_are_sorted=True``); the
     Pallas substrate walks the same dst-sorted edge blocks."""
     sub = _resolve(substrate)
+    tiered = getattr(g, "tiered_pull_dense", None)
+    if tiered is not None:
+        # out-of-core dispatch (core/tiered.py): stream the CSC mirror's
+        # in-edge shards through the same bounded pool as the push path;
+        # raises when the graph was cut without build_csc=True
+        return tiered(src_val, active, out_init, kind, use_weight, sub,
+                      det=(kind == "add" and _deterministic_add))
     if getattr(g, "is_tiered", False):
         raise NotImplementedError(
-            "tiered graphs keep only out-edge shards host-resident; there "
-            "is no CSC mirror to pull from — use push-style algorithms")
+            "this tiered container holds only staged out-edge shards; "
+            "pull runs on the TieredGraph itself (eager rounds), not "
+            "inside a staged stretch")
     sharded = getattr(g, "sharded_pull_dense", None)
     if sharded is not None:
         if kind == "add" and _deterministic_add:

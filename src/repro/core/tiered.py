@@ -37,6 +37,25 @@ Accounting is auditable the way ``comm_*`` is: every miss streams exactly
 ``shard_bytes`` (the padded src/dst/w triple), so
 ``RunStats.h2d_bytes == shards_streamed * shard_bytes`` identically, and
 ``buffer_hits`` counts scheduled shards already resident.
+``edges_relaxed`` charges each scheduled shard's *valid* edge count
+(``shard_sizes``), never its padded ``epd`` slots, so streamed
+``edges_touched`` equals the all-resident run's even when shards pad
+unevenly.
+
+Two extensions restore what eager streaming gave up:
+
+* **Rung-fused streaming** (``TieredGraph.stage`` + ``StagedShards`` +
+  ``engine.run_streamed``) — when the frontier's live-shard set is stable
+  and fits the pool, the set is pre-staged once and consecutive rounds run
+  as ONE jitted band-exit while_loop, exiting when the frontier dies or
+  its live set changes (detected on device).  Host fetches then scale with
+  live-set *switches*, not rounds — the PR 5 stretch amortisation, out of
+  core.
+* **Streamed CSC mirror** (``tier_graph(..., build_csc=True)`` /
+  ``save_graph``) — in-edge shards cut at the same vertex bounds and
+  padded to the same ``epd`` stream through the same pool under
+  ``("csc", sid)`` keys, so ``pull_dense`` (and with it ``bfs_dirop``)
+  runs out-of-core with identical accounting.
 
 Reduction-order contract
 ------------------------
@@ -89,7 +108,8 @@ class StreamIO:
     h2d_bytes: int = 0
     shards_streamed: int = 0
     buffer_hits: int = 0
-    edges_relaxed: int = 0  # edge slots processed (epd per scheduled shard)
+    edges_relaxed: int = 0  # valid edges relaxed (per-shard true sizes,
+    #                         sentinel padding slots are never charged)
     # fault-tolerance ledger: reads retried through the RetryPolicy,
     # checksum mismatches observed (every one either healed on retry or
     # became a ShardCorruptError), and wall time the fetch path spent on
@@ -104,12 +124,18 @@ class StreamIO:
                 self.edges_relaxed, self.io_retries, self.checksum_failures,
                 self.io_wait_us)
 
-    def fold_delta(self, stats, before: Tuple[int, ...]) -> None:
-        """Add the counters accumulated since ``before`` into a RunStats."""
+    def fold_delta(self, stats, before: Tuple[int, ...],
+                   include_edges: bool = True) -> None:
+        """Add the counters accumulated since ``before`` into a RunStats.
+
+        ``include_edges=False`` folds only the streaming/IO counters —
+        for algorithms (bfs_dirop) that charge ``edges_touched`` by their
+        own work convention rather than by relaxed edge slots."""
         stats.h2d_bytes += self.h2d_bytes - before[0]
         stats.shards_streamed += self.shards_streamed - before[1]
         stats.buffer_hits += self.buffer_hits - before[2]
-        stats.edges_touched += self.edges_relaxed - before[3]
+        if include_edges:
+            stats.edges_touched += self.edges_relaxed - before[3]
         stats.io_retries += self.io_retries - before[4]
         stats.checksum_failures += self.checksum_failures - before[5]
         stats.io_wait_us += self.io_wait_us - before[6]
@@ -134,6 +160,24 @@ def _shard_relax(src, dst, w, src_val, active, acc, *, kind, use_weight,
     return gk.push_ref(s, d, w, src_val, active, acc, kind, use_weight)
 
 
+@partial(jax.jit, static_argnames=("kind", "use_weight", "sub", "det"))
+def _shard_pull(nbr, dst, w, src_val, active, acc, *, kind, use_weight,
+                sub, det):
+    """Relax one device-resident CSC shard (in-edges, dst-sorted) into the
+    running accumulator — the pull-direction twin of ``_shard_relax``.
+    In-edges are laid out (dst, src)-sorted and padded with the sentinel
+    (the largest vertex index), so within a shard ``dst`` stays sorted and
+    the jnp substrate keeps the resident pull's sorted segment reduction.
+    """
+    if kind == "add" and det:
+        # pull ≡ push over the in-edge list (nbr → dst); same fixed order
+        return gk.det_push_ref(nbr, dst, w, src_val, active, acc, use_weight)
+    if sub == "pallas":
+        return gk.edge_relax(nbr, dst, w, active, src_val, acc, kind=kind,
+                             use_weight=use_weight, vertex_mask=True)
+    return gk.pull_ref(nbr, dst, w, src_val, active, acc, kind, use_weight)
+
+
 @partial(jax.jit, static_argnames=("nshards",))
 def _round_live(owner, out_deg, mask, nshards: int):
     """Device-side ``(frontier_count, live_shard_mask)`` for one round:
@@ -144,6 +188,85 @@ def _round_live(owner, out_deg, mask, nshards: int):
     act = mask & (out_deg > 0)
     per = jnp.zeros((nshards,), jnp.int32).at[owner].add(act.astype(jnp.int32))
     return jnp.sum(mask.astype(jnp.int32)), per > 0
+
+
+@partial(jax.tree_util.register_dataclass,
+         data_fields=("shards", "live", "out_deg", "owner"),
+         meta_fields=("n", "m", "n_pad", "block_size", "nshards", "epd",
+                      "sids"))
+@dataclasses.dataclass(frozen=True)
+class StagedShards:
+    """A pre-staged live shard set, frozen as a pytree so rounds over it
+    can fuse into one jitted band-exit ``lax.while_loop``.
+
+    ``TieredGraph.stage`` builds one when the predicted live set fits the
+    buffer pool: the staged shard buffers (ascending shard order), the
+    live fingerprint the stretch's exit predicate compares against
+    (``frontier.live_stable``), and the vertex-tier arrays.  It quacks
+    like the graph for the vertex surface and for ``push_dense`` /
+    ``sparse_round`` dispatch (``is_tiered`` routes both to
+    ``tiered_push_dense``), but every relax is pure device computation —
+    no pool walk, no host fetch — so ``engine._staged_stretch`` can run
+    consecutive rounds device-resident.  Relaxes fold the staged shards in
+    ascending shard order, the same op sequence as the eager streamed
+    round over the same live set, so labels stay bitwise identical.
+    """
+
+    shards: Tuple[Tuple[jax.Array, jax.Array, jax.Array], ...]
+    live: jax.Array      # (nshards,) bool — the staged live fingerprint
+    out_deg: jax.Array   # (n_pad,) int32
+    owner: jax.Array     # (n_pad,) int32
+    n: int
+    m: int
+    n_pad: int
+    block_size: int
+    nshards: int
+    epd: int
+    sids: Tuple[int, ...]  # staged shard ids, ascending
+
+    is_tiered = True
+    ndev = 1
+    placement = "tiered"
+    has_csc = False
+
+    @property
+    def sentinel(self) -> int:
+        return self.n_pad - 1
+
+    @property
+    def m_pad(self) -> int:
+        return self.nshards * self.epd
+
+    def vertex_full(self, fill, dtype) -> jax.Array:
+        return jnp.full((self.n_pad,), fill, dtype=dtype)
+
+    def valid_vertex_mask(self) -> jax.Array:
+        return jnp.arange(self.n_pad) < self.n
+
+    def budget_edge_mass(self, mask: jax.Array) -> jax.Array:
+        return jnp.sum(jnp.where(mask, self.out_deg, 0))
+
+    def round_live(self, mask: jax.Array):
+        return _round_live(self.owner, self.out_deg, mask, self.nshards)
+
+    def tiered_push_dense(self, src_val, active, out_init, kind, use_weight,
+                          substrate, reverse=False, det=False):
+        """Masked push over the staged shards, folded in ascending shard
+        order — trace-safe (``operators.push_dense`` dispatches here when
+        a staged set flows through a jitted stretch body).  The stretch's
+        exit predicate guarantees the mask's live set equals the staged
+        set for every executed round, so relaxing exactly the staged
+        shards is relaxing exactly the scheduled shards."""
+        if reverse:
+            raise NotImplementedError(
+                "staged stretches are forward-only; reversed pushes "
+                "schedule every shard and stay on the eager streamed path")
+        acc = out_init
+        for s, d, w in self.shards:
+            acc = _shard_relax(s, d, w, src_val, active, acc, kind=kind,
+                               use_weight=use_weight, sub=substrate, det=det,
+                               reverse=False)
+        return acc
 
 
 class TieredGraph:
@@ -161,7 +284,6 @@ class TieredGraph:
     is_tiered = True
     ndev = 1
     placement = "tiered"
-    has_csc = False
 
     def __init__(
         self,
@@ -179,6 +301,12 @@ class TieredGraph:
         resident_shards: int,
         shard_crcs: Optional[Sequence[int]] = None,
         verify_checksums: bool = True,
+        csc_host: Optional[Sequence[Tuple[np.ndarray, np.ndarray,
+                                          np.ndarray]]] = None,
+        in_shard_sizes: Optional[np.ndarray] = None,
+        in_shard_crcs: Optional[Sequence[int]] = None,
+        in_deg: Optional[np.ndarray] = None,
+        verified: bool = True,
     ):
         if resident_shards < 2:
             raise ValueError(
@@ -201,6 +329,24 @@ class TieredGraph:
         self.shard_crcs = (None if shard_crcs is None
                            else [int(c) for c in shard_crcs])
         self.verify_checksums = bool(verify_checksums)
+        # ``verified`` records whether integrity actually holds for this
+        # handle: False for checksum-less (v1) stores and verify="off"
+        # opens — satellite of the silent-unverified-open fix
+        self.verified = bool(verified) and self.shard_crcs is not None
+        # optional streamed CSC mirror (pull direction): in-edge shards
+        # cut at the SAME vtx_bounds, padded to the SAME epd, flowing
+        # through the same pool / CRC / retry machinery under pool keys
+        # ("csc", sid)
+        self._csc_host = None if csc_host is None else list(csc_host)
+        self.in_shard_sizes = (None if in_shard_sizes is None
+                               else np.asarray(in_shard_sizes, np.int64))
+        self.in_shard_crcs = (None if in_shard_crcs is None
+                              else [int(c) for c in in_shard_crcs])
+        self.in_deg = (None if in_deg is None
+                       else jnp.asarray(np.asarray(in_deg, np.int32)))
+        if self._csc_host is not None:
+            assert len(self._csc_host) == nshards
+            assert self.in_shard_sizes is not None and self.in_deg is not None
         self.retry = RetryPolicy(max_retries=2, base_delay_s=0.01,
                                  retryable=(OSError, ShardCorruptError))
         self.fault: Optional[FaultInjector] = None
@@ -210,11 +356,18 @@ class TieredGraph:
                                 side="right") - 1
         self.owner = jnp.asarray(np.clip(owner, 0, nshards - 1).astype(
             np.int32))
-        self._pool: "OrderedDict[int, tuple]" = OrderedDict()
+        # one LRU pool for BOTH directions: keys are ("csr"|"csc", sid),
+        # so the resident budget bounds total device buffers regardless of
+        # which direction a round streams
+        self._pool: "OrderedDict[tuple, tuple]" = OrderedDict()
         self._live_hint: Optional[np.ndarray] = None
         self.io = StreamIO()
 
     # ---- Graph-compatible surface -------------------------------------
+    @property
+    def has_csc(self) -> bool:
+        return self._csc_host is not None
+
     @property
     def sentinel(self) -> int:
         return self.n_pad - 1
@@ -270,28 +423,33 @@ class TieredGraph:
         ``round`` site).  Test/chaos-drill only — ``None`` detaches."""
         self.fault = fault
 
-    def _read_shard(self, sid: int):
+    def _read_shard(self, sid: int, direction: str = "csr"):
         """One read attempt of shard ``sid``'s host arrays: fault
         injection first (may raise InjectedIOError / sleep / kill), then
         checksum verification against the recorded CRC.  Raises
         ShardCorruptError on mismatch — the retry policy re-invokes this
         whole attempt, so transient read corruption heals and persistent
-        corruption keeps failing until the typed error escapes."""
-        s, d, w = self._host[sid]
+        corruption keeps failing until the typed error escapes.  CSC
+        shards tick the same ``shard_read`` fault site under the key
+        ``nshards + sid`` so plans can target either direction."""
+        csc = direction == "csc"
+        s, d, w = (self._csc_host if csc else self._host)[sid]
         if self.fault is not None:
-            s, d, w = self.fault.shard_read(sid, s, d, w)
-        if self.verify_checksums and self.shard_crcs is not None:
+            s, d, w = self.fault.shard_read(self.nshards + sid if csc
+                                            else sid, s, d, w)
+        crcs = self.in_shard_crcs if csc else self.shard_crcs
+        if self.verify_checksums and crcs is not None:
             got = shard_crc(s, d, w)
-            want = self.shard_crcs[sid]
+            want = crcs[sid]
             if got != want:
                 self.io.checksum_failures += 1
                 raise ShardCorruptError(
-                    f"shard {sid}: crc32 {got:#010x} != recorded "
+                    f"{direction} shard {sid}: crc32 {got:#010x} != recorded "
                     f"{want:#010x} — bit-rot, a torn write, or a store "
                     "mixed from two cuts; rebuild with save_graph")
         return s, d, w
 
-    def _fetch(self, sid: int):
+    def _fetch(self, sid: int, direction: str = "csr"):
         """Device buffer of shard ``sid``; a pool hit costs zero bytes, a
         miss streams the shard (async H2D), evicting LRU shards beyond the
         pool budget.  Every scheduled shard passes through here exactly
@@ -309,10 +467,11 @@ class TieredGraph:
         counters stay exact under retries: one successful miss charges
         exactly one ``shard_bytes``, however many attempts it took."""
         pool = self._pool
-        if sid in pool:
-            pool.move_to_end(sid)
+        key = (direction, sid)
+        if key in pool:
+            pool.move_to_end(key)
             self.io.buffer_hits += 1
-            return pool[sid]
+            return pool[key]
         t0 = time.perf_counter()
         while len(pool) >= self.resident_shards:
             pool.popitem(last=False)
@@ -321,14 +480,14 @@ class TieredGraph:
             self.io.io_retries += 1
 
         try:
-            s, d, w = self.retry.run(self._read_shard, sid,
+            s, d, w = self.retry.run(self._read_shard, sid, direction,
                                      on_retry=count_retry)
             # one async H2D per array: jax.device_put returns immediately,
             # so the copy overlaps the previous shard's relax dispatch
             buf = (jax.device_put(s), jax.device_put(d), jax.device_put(w))
         finally:
             self.io.io_wait_us += int((time.perf_counter() - t0) * 1e6)
-        pool[sid] = buf
+        pool[key] = buf
         self.io.shards_streamed += 1
         self.io.h2d_bytes += self.shard_bytes
         return buf
@@ -360,7 +519,10 @@ class TieredGraph:
             sched = list(range(self.nshards))
         else:
             sched = self._schedule(active)
-        self.io.edges_relaxed += len(sched) * self.epd
+        # charge the VALID edges of each scheduled shard, not epd slots:
+        # shards pad unevenly, and charging sentinel padding overcounted
+        # streamed edges_touched vs the all-resident run
+        self.io.edges_relaxed += int(self.shard_sizes[sched].sum())
         acc = out_init
         if not sched:
             return acc
@@ -374,6 +536,83 @@ class TieredGraph:
                                sub=substrate, det=det, reverse=reverse)
         return acc
 
+    def tiered_pull_dense(self, src_val, active, out_init, kind, use_weight,
+                          substrate, det=False):
+        """Pull-style relax streamed through the CSC mirror
+        (``operators.pull_dense`` dispatch target).  Pull is dense by
+        nature — every destination reduces over its in-neighbours, and a
+        frontier vertex's out-edges may land in any shard's in-edge range
+        — so all ``nshards`` CSC shards stream in ascending order through
+        the same pool / prefetch / accounting as the push path (pool keys
+        ("csc", sid)).  ``min``/``max``/``or`` are bitwise identical to
+        the resident ``pull_dense``; float ``add`` associates per shard
+        (the module's reduction-order contract, pull edition)."""
+        if not self.has_csc:
+            raise NotImplementedError(
+                "this tiered graph has no CSC mirror; rebuild with "
+                "tier_graph(..., build_csc=True) (or save_graph from a "
+                "graph built with from_coo(..., build_csc=True))")
+        self.io.edges_relaxed += int(self.in_shard_sizes.sum())
+        acc = out_init
+        cur = self._fetch(0, "csc")
+        for sid in range(self.nshards):
+            buf = cur
+            if sid + 1 < self.nshards:
+                cur = self._fetch(sid + 1, "csc")  # prefetch overlaps relax
+            acc = _shard_pull(buf[0], buf[1], buf[2], src_val, active, acc,
+                              kind=kind, use_weight=use_weight,
+                              sub=substrate, det=det)
+        return acc
+
+    # ---- staged stretch support (engine.run_streamed fused mode) -------
+    def live_edges(self, live: np.ndarray) -> int:
+        """Valid edges one round over ``live``'s shard set relaxes — the
+        per-round ``edges_relaxed`` charge of a staged stretch."""
+        return int(self.shard_sizes[np.flatnonzero(live)].sum())
+
+    def charge_staged_rounds(self, k: int, live: np.ndarray) -> None:
+        """Account ``k`` fused rounds over the staged set ``live``:
+        identical to what ``k`` eager rounds over the same schedule would
+        have charged (the buffers were fetched once by ``stage``, so the
+        h2d / hit counters already flowed through ``_fetch``)."""
+        self.io.edges_relaxed += int(k) * self.live_edges(live)
+
+    def stage(self, live: np.ndarray) -> Optional[StagedShards]:
+        """Pre-stage ``live``'s shard set for a fused stretch, or ``None``
+        when staging is not worthwhile (dead frontier, or the live set
+        outgrows the buffer pool — those rounds run eager, where the LRU
+        pool restreams by design).  Fetches flow through ``_fetch`` in
+        ascending shard order, so pool content, LRU order and the miss
+        counters after staging are exactly what the first eager round over
+        this schedule would have left behind."""
+        sids = [int(s) for s in np.flatnonzero(live)]
+        if not sids or len(sids) > self.resident_shards:
+            return None
+        bufs = tuple(self._fetch(s) for s in sids)
+        return StagedShards(
+            shards=bufs,
+            live=jnp.asarray(np.asarray(live, bool)),
+            out_deg=self.out_deg, owner=self.owner,
+            n=self.n, m=self.m, n_pad=self.n_pad,
+            block_size=self.block_size, nshards=self.nshards, epd=self.epd,
+            sids=tuple(sids))
+
+
+def _pad_cut(src, dst, w, bounds, epd: int, sent: int):
+    """Pad the contiguous edge slices at ``bounds`` to uniform ``epd``
+    slots (sentinel on index padding, 0 weight)."""
+    shards = []
+    for s in range(len(bounds) - 1):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        ss = np.full((epd,), sent, np.int32)
+        dd = np.full((epd,), sent, np.int32)
+        ww = np.zeros((epd,), np.float32)
+        ss[: hi - lo] = src[lo:hi]
+        dd[: hi - lo] = dst[lo:hi]
+        ww[: hi - lo] = w[lo:hi]
+        shards.append((ss, dd, ww))
+    return shards
+
 
 def tier_graph(
     g: Graph,
@@ -381,6 +620,7 @@ def tier_graph(
     resident_shards: int = 2,
     *,
     resident_bytes: Optional[int] = None,
+    build_csc: bool = False,
 ) -> TieredGraph:
     """Cut an in-memory ``Graph`` into a :class:`TieredGraph`.
 
@@ -392,30 +632,44 @@ def tier_graph(
     the point.  (For multi-hundred-MB graphs, build once with
     ``checkpoint.save_graph`` and reopen with ``checkpoint.open_graph`` to
     skip this cut and mmap the shards instead.)
+
+    ``build_csc=True`` also cuts the source graph's CSC mirror (requires
+    ``from_coo(..., build_csc=True)``) into in-edge shards at the SAME
+    vertex bounds: shard s holds the in-edges of the vertices it owns,
+    (dst, src)-sorted.  Both directions share one ``epd`` (the max of the
+    two cuts), so ``shard_bytes`` — and with it the
+    ``h2d_bytes == shards_streamed * shard_bytes`` model — stays uniform
+    across directions.
     """
     vtx, eb = shard_ranges(g, nshards)
     sizes = np.diff(eb)
     epd = round_up(max(int(sizes.max()), 1), 8)
+    in_sizes = ieb = None
+    if build_csc:
+        if not g.has_csc:
+            raise ValueError(
+                "build_csc=True needs the source graph's CSC mirror; "
+                "build it with from_coo(..., build_csc=True)")
+        ieb = np.asarray(g.in_row_ptr)[vtx].astype(np.int64)
+        in_sizes = np.diff(ieb)
+        epd = round_up(max(epd, int(in_sizes.max()), 1), 8)
     if resident_bytes is not None:
         resident_shards = max(2, int(resident_bytes) // (epd * 12))
-    src = np.asarray(g.src_idx)
-    dst = np.asarray(g.col_idx)
-    w = np.asarray(g.edge_w)
     sent = g.n_pad - 1
-    shards = []
-    for s in range(nshards):
-        lo, hi = int(eb[s]), int(eb[s + 1])
-        ss = np.full((epd,), sent, np.int32)
-        dd = np.full((epd,), sent, np.int32)
-        ww = np.zeros((epd,), np.float32)
-        ss[: hi - lo] = src[lo:hi]
-        dd[: hi - lo] = dst[lo:hi]
-        ww[: hi - lo] = w[lo:hi]
-        shards.append((ss, dd, ww))
+    shards = _pad_cut(np.asarray(g.src_idx), np.asarray(g.col_idx),
+                      np.asarray(g.edge_w), eb, epd, sent)
+    csc_kw = {}
+    if build_csc:
+        cscs = _pad_cut(np.asarray(g.in_col_idx), np.asarray(g.in_src_idx),
+                        np.asarray(g.in_edge_w), ieb, epd, sent)
+        csc_kw = dict(csc_host=cscs, in_shard_sizes=in_sizes,
+                      in_shard_crcs=[shard_crc(*sh) for sh in cscs],
+                      in_deg=np.asarray(g.in_deg))
     return TieredGraph(
         n=g.n, m=g.m, n_pad=g.n_pad, block_size=g.block_size,
         nshards=nshards, epd=epd, vtx_bounds=vtx, shard_sizes=sizes,
         host_shards=shards, out_deg=np.asarray(g.out_deg),
         resident_shards=resident_shards,
         shard_crcs=[shard_crc(*sh) for sh in shards],
+        **csc_kw,
     )

@@ -69,8 +69,11 @@ class QueryRequest:
     rows; ``rounds`` counts the batched rounds the lane rode along.
 
     ``deadline_ticks`` is the degradation contract: the request may spend
-    at most that many serving ticks from enqueue (queue wait + service
-    combined).  At the first tick past the budget it is shed — evicted
+    at most that many serving ticks counted from ENQUEUE — the tick the
+    scheduler first sees it (``enqueue_tick``), NOT the tick it lands in a
+    lane — so queue wait and service draw down the same budget and a
+    request can expire without ever being admitted.  At the first tick
+    past the budget it is shed — evicted
     from its lane (or dropped from the queue), ``done`` with
     ``reject_reason="deadline"`` and ``labels=None`` — so one pathological
     query cannot pin a slot forever.  ``reject_reason`` is also how
@@ -148,6 +151,12 @@ class GraphServer:
                 f"request {req.rid}: source {req.source} outside [0, {self.g.n})")
         if not self.free_slots:
             return False
+        if req.enqueue_tick < 0:
+            # direct admission (bypassing tick()'s ready-queue stamp):
+            # admission IS first scheduler visibility, so the deadline
+            # clock starts here — without this stamp _expired() could
+            # never fire and deadline_ticks would silently mean "never"
+            req.enqueue_tick = self.tick_no
         slot = self.free_slots.pop()
         req.slot = slot
         self.slots[slot] = req

@@ -55,9 +55,13 @@ def _tiered(seed=0):
 
 @pytest.fixture(scope="module")
 def reference():
-    """Uninterrupted streamed BFS labels + stats, shared across drills."""
+    """Uninterrupted streamed BFS labels + stats, shared across drills.
+    Eager (``fused=False``): an attached fault injector forces the fault
+    runs onto the per-round path, and the hit/stream accounting below is
+    compared round-for-round against this baseline (fused stretches hit
+    each staged buffer once per stretch, not once per round)."""
     tg = _tiered()
-    dist, st = bfs.bfs_dd_sparse(tg, 0)
+    dist, st = bfs.bfs_dd_sparse(tg, 0, fused=False)
     return np.asarray(dist), st, tg.shard_bytes
 
 
@@ -317,6 +321,24 @@ def test_queued_deadline_expiry_sheds_without_service():
     out = srv.serve([hog, impatient])
     assert out[0].labels is not None
     assert out[1].reject_reason == "deadline" and out[1].rounds == 0
+
+
+def test_direct_admit_bypassing_tick_still_starts_deadline_clock():
+    """admit() called directly (never passing through tick()'s ready-queue
+    stamp) must start the deadline clock itself — without that stamp
+    enqueue_tick stays -1, _expired() can never fire, and deadline_ticks
+    silently means "never"."""
+    g = _serve_graph()
+    srv = GraphServer(g, algo="bfs", max_batch=1)
+    req = QueryRequest(rid=0, source=0, deadline_ticks=1)
+    assert srv.admit(req)
+    assert req.enqueue_tick == 0          # admission started the clock
+    for _ in range(8):
+        if not srv.tick([]):
+            break
+    assert req.done and req.reject_reason == "deadline"
+    assert req.labels is None
+    assert srv.deadline_evictions == 1
 
 
 def test_straggler_monitor_hooks_tick_wall_time():

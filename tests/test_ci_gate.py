@@ -1,0 +1,75 @@
+"""CI-gate trend degradation contract: a missing, corrupt, or
+wrong-shaped PREVIOUS artifact is the normal first-run state of a trend
+job (new branch, artifact retention lapsed, torn upload) and must degrade
+to a "no previous artifact" summary note with exit 0 — only this run's
+own bench file may fail the job."""
+
+import argparse
+import json
+
+import pytest
+
+from benchmarks import ci_gate
+
+
+def _bench(tmp_path, name, rows):
+    p = tmp_path / name
+    p.write_text(json.dumps({"rows": rows}))
+    return str(p)
+
+
+def _rows(wall=100.0):
+    return [{"name": "engine/bfs", "us_per_call": wall,
+             "stats": {"wall_us_min": wall, "comm_elems": 7}}]
+
+
+def _trend(bench, prev):
+    return ci_gate.cmd_trend(argparse.Namespace(bench=bench, prev=prev))
+
+
+def test_trend_degrades_on_missing_baseline(tmp_path, capsys):
+    cur = _bench(tmp_path, "cur.json", _rows())
+    rc = _trend(cur, str(tmp_path / "does_not_exist.json"))
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "no previous artifact" in out
+    assert "trend resumes next run" in out
+
+
+def test_trend_degrades_on_corrupt_json_baseline(tmp_path, capsys):
+    cur = _bench(tmp_path, "cur.json", _rows())
+    bad = tmp_path / "prev.json"
+    bad.write_text('{"rows": [torn upload')
+    rc = _trend(cur, str(bad))
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "no previous artifact" in out
+
+
+def test_trend_degrades_on_wrong_shape_baseline(tmp_path, capsys):
+    cur = _bench(tmp_path, "cur.json", _rows())
+    # valid JSON, wrong structure: a bare list (no rows mapping) and a
+    # rows list whose entries lack the "name" key
+    for doc in ([1, 2, 3], {"rows": [{"us_per_call": 5.0}]}):
+        bad = tmp_path / "prev.json"
+        bad.write_text(json.dumps(doc))
+        rc = _trend(cur, str(bad))
+        out = capsys.readouterr().out
+        assert rc == 0
+        assert "no previous artifact" in out
+
+
+def test_trend_diffs_against_healthy_baseline(tmp_path, capsys):
+    cur = _bench(tmp_path, "cur.json", _rows(wall=120.0))
+    prev = _bench(tmp_path, "prev.json", _rows(wall=100.0))
+    rc = _trend(cur, prev)
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "bench trend vs previous main run" in out
+    assert "engine/bfs" in out and "+20%" in out
+
+
+def test_trend_still_fails_on_this_runs_own_file(tmp_path):
+    prev = _bench(tmp_path, "prev.json", _rows())
+    with pytest.raises(OSError):
+        _trend(str(tmp_path / "missing_cur.json"), prev)

@@ -97,16 +97,20 @@ def test_reverse_push_streams_all_shards():
     want = ops.push_dense(g, vals, active, vals, kind="min", reverse=True)
     got = ops.push_dense(tg, vals, active, vals, kind="min", reverse=True)
     np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
-    # reverse activates on destinations → every shard was scheduled
-    assert tg.io.edges_relaxed == tg.nshards * tg.epd
+    # reverse activates on destinations → every shard was scheduled, and
+    # the charge is each shard's VALID edges (= m total), never epd slots
+    assert tg.io.edges_relaxed == g.m
+    assert g.m < tg.nshards * tg.epd  # the cut really pads
 
 
-def test_pull_refused_on_tiered():
+def test_pull_refused_without_csc_mirror():
     tg = tier_graph(_test_graph(), nshards=4)
-    with pytest.raises(NotImplementedError):
+    with pytest.raises(NotImplementedError, match="build_csc=True"):
         ops.pull_dense(tg, tg.vertex_full(0.0, jnp.float32),
                        tg.valid_vertex_mask(),
                        tg.vertex_full(0.0, jnp.float32), kind="min")
+    with pytest.raises(ValueError, match="build_csc=True"):
+        tier_graph(_test_graph(), nshards=4, build_csc=True)
 
 
 # ---------------------------------------------------------------------------
@@ -116,13 +120,50 @@ def test_pull_refused_on_tiered():
 def test_h2d_matches_analytic_model_exactly():
     g = _test_graph(seed=11)
     for pool in (2, 3):
+        # eager baseline: every scheduled shard passes through _fetch
+        # exactly once per relax, so the fetch log IS the schedule
         tg = tier_graph(g, nshards=8, resident_shards=pool)
-        _, stats = bfs.bfs_dd_sparse(tg, 0)
+        fetched = []
+        orig = tg._fetch
+
+        def counting(sid, direction="csr", _orig=orig, _log=fetched):
+            _log.append(sid)
+            return _orig(sid, direction)
+
+        tg._fetch = counting
+        _, stats = bfs.bfs_dd_sparse(tg, 0, fused=False)
         assert stats.h2d_bytes == stats.shards_streamed * tg.shard_bytes
         # every scheduled shard was either a hit or a stream
-        sched = stats.edges_touched // tg.epd
-        assert stats.buffer_hits + stats.shards_streamed == sched
-        assert stats.edges_touched == sched * tg.epd
+        assert stats.buffer_hits + stats.shards_streamed == len(fetched)
+        # the edge charge is the schedule's VALID sizes, not epd slots
+        assert stats.edges_touched == int(
+            tg.shard_sizes[np.asarray(fetched)].sum())
+        # fused streaming changes host syncs only: identical h2d model,
+        # identical streamed work
+        tf = tier_graph(g, nshards=8, resident_shards=pool)
+        _, fstats = bfs.bfs_dd_sparse(tf, 0, fused=True)
+        assert fstats.h2d_bytes == fstats.shards_streamed * tf.shard_bytes
+        assert fstats.h2d_bytes == stats.h2d_bytes
+        assert fstats.shards_streamed == stats.shards_streamed
+        assert fstats.edges_touched == stats.edges_touched
+
+
+def test_streamed_edge_accounting_matches_resident_with_uneven_padding():
+    """Satellite pin: shards pad unevenly (epd is the max shard size, so
+    smaller shards carry sentinel slots), and the old per-slot charge
+    overcounted streamed edges_touched vs the resident run.  bfs_topo
+    activates every vertex every round, so the resident run charges
+    rounds·m and the streamed run must charge exactly the same."""
+    g = _test_graph(seed=21)
+    tg = tier_graph(g, nshards=4, resident_shards=2)
+    assert len({int(s) for s in tg.shard_sizes}) > 1  # genuinely uneven
+    assert int(tg.shard_sizes.sum()) == g.m < tg.nshards * tg.epd
+    ref, rst = bfs.bfs_topo(g, 0)
+    got, sst = bfs.bfs_topo(tg, 0)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    assert rst.edges_touched == rst.rounds * g.m
+    assert sst.rounds == rst.rounds
+    assert sst.edges_touched == rst.edges_touched
 
 
 def test_all_resident_pool_streams_each_shard_at_most_once():
@@ -133,6 +174,128 @@ def test_all_resident_pool_streams_each_shard_at_most_once():
     _, s2 = bfs.bfs_dd_sparse(tg, 1)
     assert s2.shards_streamed == 0  # warm pool: zero H2D bytes
     assert s2.h2d_bytes == 0 and s2.buffer_hits > 0
+
+
+def test_fused_streaming_host_fetches_scale_with_live_set_switches(
+        monkeypatch):
+    """The rung-fusion contract, out of core: on a path graph (frontier
+    size 1 for ~256 rounds) the live-shard set changes only when the
+    frontier crosses a shard boundary, so the fused streamed run blocks on
+    the device O(live-set switches) times while the eager baseline blocks
+    once per round — with bitwise-identical labels."""
+    import jax
+
+    from repro.graphs.generators import path
+
+    src, dst, n = path(256)
+    g = from_coo(src, dst, n, block_size=16)
+    tg = tier_graph(g, nshards=4, resident_shards=2)
+
+    calls = {"n": 0}
+    real = jax.device_get
+
+    def counting(x):
+        calls["n"] += 1
+        return real(x)
+
+    monkeypatch.setattr(jax, "device_get", counting)
+    dist, st = bfs.bfs_dd_sparse(tg, 0)  # fused is the default
+    assert st.rounds >= n - 2
+    fused_calls = calls["n"]
+    # ~4 shard crossings on the path, one blocking fetch per trip — far
+    # below the 255 per-round syncs a regression to eager would pay
+    assert fused_calls <= 24, (fused_calls, st.rounds)
+    calls["n"] = 0
+    tg2 = tier_graph(g, nshards=4, resident_shards=2)
+    dist_p, st_p = bfs.bfs_dd_sparse(tg2, 0, fused=False)
+    assert calls["n"] >= st_p.rounds
+    np.testing.assert_array_equal(np.asarray(dist), np.asarray(dist_p))
+    assert fused_calls * 8 <= calls["n"]
+
+
+# ---------------------------------------------------------------------------
+# streamed CSC mirror: out-of-core pull + direction-optimizing bfs
+# ---------------------------------------------------------------------------
+
+def _csc_graph(seed=3, n=300, m=2500, block=32):
+    src, dst, n = gen.erdos(n, m, seed=seed)
+    r = np.random.default_rng(seed)
+    w = r.uniform(0.5, 3.0, len(src)).astype(np.float32)
+    return from_coo(src, dst, n, w, block_size=block, build_csc=True)
+
+
+def test_tiered_pull_bitwise_vs_resident():
+    g = _csc_graph(seed=17)
+    vals = jnp.asarray(np.random.default_rng(1).uniform(
+        0, 5, g.n_pad).astype(np.float32))
+    active = g.valid_vertex_mask()
+    init = g.vertex_full(jnp.float32(1e9), jnp.float32)
+    want = ops.pull_dense(g, vals, active, init, kind="min", use_weight=True)
+    tg = tier_graph(g, nshards=4, resident_shards=2, build_csc=True)
+    assert tg.has_csc
+    got = ops.pull_dense(tg, vals, active, init, kind="min", use_weight=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+    # pull is dense by nature: all nshards CSC shards streamed, charged by
+    # their valid in-edge sizes (= m), through the shared pool
+    assert tg.io.edges_relaxed == g.m
+    assert tg.io.h2d_bytes == tg.io.shards_streamed * tg.shard_bytes
+
+
+def test_bfs_dirop_streams_out_of_core_bitwise(tmp_path):
+    g = _csc_graph(seed=18)
+    ref, rst = bfs.bfs_dirop(g, 0)
+    save_graph(g, str(tmp_path), nshards=6)
+    tg = open_graph(str(tmp_path), resident_shards=2)
+    assert tg.has_csc and tg.csr_bytes >= 3 * tg.resident_budget
+    got, sst = bfs.bfs_dirop(tg, 0)
+    np.testing.assert_array_equal(np.asarray(ref), np.asarray(got))
+    # identical direction switches (the α/β decision is computed on device
+    # with the resident trace's f32 expressions) and the PR 7 accounting
+    # convention: push = m, pull = unvisited in-degree scan mass
+    assert sst.rounds == rst.rounds
+    assert sst.pull_rounds == rst.pull_rounds
+    assert sst.edges_touched == rst.edges_touched
+    assert sst.pull_rounds > 0  # the drill actually exercised pulls
+    assert sst.h2d_bytes == sst.shards_streamed * tg.shard_bytes
+
+
+def test_csc_store_roundtrip(tmp_path):
+    g = _csc_graph(seed=19)
+    tg = tier_graph(g, nshards=4, resident_shards=2, build_csc=True)
+    save_graph(tg, str(tmp_path))
+    with open(os.path.join(str(tmp_path), "graph_manifest.json")) as f:
+        man = json.load(f)
+    assert len(man["csc"]["shard_crcs"]) == 4
+    assert man["csc"]["shard_sizes"] == [int(s) for s in tg.in_shard_sizes]
+    assert os.path.exists(os.path.join(str(tmp_path), "cscshard_000003.npz"))
+    re = open_graph(str(tmp_path), resident_shards=2, verify="require")
+    assert re.has_csc and re.verified
+    np.testing.assert_array_equal(np.asarray(tg.in_deg), np.asarray(re.in_deg))
+    vals = jnp.asarray(np.random.default_rng(2).uniform(
+        0, 5, g.n_pad).astype(np.float32))
+    active = g.valid_vertex_mask()
+    init = g.vertex_full(jnp.float32(1e9), jnp.float32)
+    want = ops.pull_dense(g, vals, active, init, kind="min", use_weight=True)
+    got = ops.pull_dense(re, vals, active, init, kind="min", use_weight=True)
+    np.testing.assert_array_equal(np.asarray(want), np.asarray(got))
+
+
+def test_corrupt_csc_shard_detected_at_fetch(tmp_path):
+    from repro.core.faultio import ShardCorruptError
+
+    g = _csc_graph(seed=20)
+    save_graph(g, str(tmp_path), nshards=4)
+    p = os.path.join(str(tmp_path), "cscshard_000002.npz")
+    blob = bytearray(open(p, "rb").read())
+    blob[len(blob) // 2] ^= 0xFF
+    with open(p, "wb") as f:
+        f.write(bytes(blob))
+    with pytest.raises(ShardCorruptError, match="csc shard 2"):
+        open_graph(str(tmp_path), verify="open")
+    tg = open_graph(str(tmp_path))  # lazy opens fine; push side untouched
+    bfs.bfs_dd_sparse(tg, 0)
+    with pytest.raises(ShardCorruptError, match="csc shard 2"):
+        bfs.bfs_dirop(tg, 0)
 
 
 # ---------------------------------------------------------------------------
@@ -268,7 +431,7 @@ def test_manifest_records_integrity_triple_and_fetch_verifies(tmp_path):
         assert man["shard_crcs"][sid] == shard_crc(*tg._host[sid])
     re = open_graph(str(tmp_path))
     assert re.shard_crcs == [int(c) for c in man["shard_crcs"]]
-    assert re.verify_checksums
+    assert re.verify_checksums and re.verified
     # and the in-memory cut carries the same CRCs without a store
     assert tg.shard_crcs == re.shard_crcs
 
@@ -290,14 +453,24 @@ def test_open_graph_verify_modes(tmp_path):
         bfs.bfs_dd_sparse(tg, 0)                     # caught at fetch
     off = open_graph(str(tmp_path), verify="off")    # trusts the store
     assert not off.verify_checksums
-    with pytest.raises(ValueError, match="fetch\\|open\\|off"):
+    assert not off.verified  # nothing was (or will be) checked
+    with pytest.raises(ValueError, match="fetch\\|open\\|require\\|off"):
         open_graph(str(tmp_path), verify="eventually")
 
 
-def test_open_graph_accepts_v1_store_unverified(tmp_path):
-    g = _test_graph(seed=11)
+def test_open_graph_v2_store_is_verified_and_require_passes(tmp_path):
+    import warnings
+
+    g = _test_graph(seed=15)
     save_graph(g, str(tmp_path), nshards=2)
-    mpath = os.path.join(str(tmp_path), "graph_manifest.json")
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # a healthy v2 open must not warn
+        tg = open_graph(str(tmp_path), verify="require")
+    assert tg.verified
+
+
+def _downgrade_to_v1(directory):
+    mpath = os.path.join(directory, "graph_manifest.json")
     with open(mpath) as f:
         man = json.load(f)
     man["format"] = "tiered-graph-v1"
@@ -305,11 +478,31 @@ def test_open_graph_accepts_v1_store_unverified(tmp_path):
         man.pop(k)
     with open(mpath, "w") as f:
         json.dump(man, f)
-    tg = open_graph(str(tmp_path), verify="open")  # nothing to check
+
+
+def test_open_graph_accepts_v1_store_unverified_with_warning(tmp_path):
+    g = _test_graph(seed=11)
+    save_graph(g, str(tmp_path), nshards=2)
+    _downgrade_to_v1(str(tmp_path))
+    # no checksums to check → the open succeeds but is NOT silent: it
+    # warns and the handle records verified=False
+    with pytest.warns(UserWarning, match="UNVERIFIED"):
+        tg = open_graph(str(tmp_path), verify="open")
     assert tg.shard_crcs is None
+    assert not tg.verified
+    with pytest.warns(UserWarning, match="UNVERIFIED"):
+        assert not open_graph(str(tmp_path)).verified  # fetch mode too
     ref = np.asarray(bfs.bfs_dd_sparse(g, 0)[0])
     np.testing.assert_array_equal(ref,
                                   np.asarray(bfs.bfs_dd_sparse(tg, 0)[0]))
+
+
+def test_open_graph_require_refuses_v1_store(tmp_path):
+    g = _test_graph(seed=11)
+    save_graph(g, str(tmp_path), nshards=2)
+    _downgrade_to_v1(str(tmp_path))
+    with pytest.raises(ValueError, match="no\\s+per-shard checksums"):
+        open_graph(str(tmp_path), verify="require")
 
 
 def test_open_graph_unreadable_shard_is_typed(tmp_path):

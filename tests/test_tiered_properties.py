@@ -1,6 +1,8 @@
 """Property-based tests (hypothesis) for the tiered out-of-core contract:
-streamed-vs-resident label equality for ANY graph / shard cut / pool size,
-and from_coo's dedup-min-weight rule for ANY duplicate multiset."""
+streamed-vs-resident label equality for ANY graph / shard cut / pool size
+— in BOTH streamed regimes (rung-fused stretches and the eager per-round
+baseline) — and from_coo's dedup-min-weight rule for ANY duplicate
+multiset."""
 
 import numpy as np
 import pytest
@@ -11,7 +13,8 @@ pytest.importorskip("hypothesis", reason="property tests need hypothesis "
 from hypothesis import given, settings, strategies as st
 
 from repro.core import from_coo, tier_graph
-from repro.core.algorithms import bfs
+from repro.core import operators as ops
+from repro.core.algorithms import bfs, pagerank
 
 
 def _graph(n, edges, seed):
@@ -37,17 +40,86 @@ graph_strategy = st.builds(
 def test_streamed_equals_resident_equals_plain(gn, nshards, pool, src):
     """For ANY graph, shard count, pool size and source: streamed bfs
     labels are bitwise identical to the in-memory Graph's, and the stream
-    accounting obeys h2d == streamed × shard_bytes with every scheduled
-    shard either hit or streamed."""
+    accounting obeys h2d == streamed × shard_bytes with the edge charge
+    equal to the schedule's valid shard sizes."""
     g, n = gn
     src = src % n
     ref = np.asarray(bfs.bfs_dd_sparse(g, src)[0])
     tg = tier_graph(g, nshards=nshards, resident_shards=pool)
-    got, stats = bfs.bfs_dd_sparse(tg, src)
+    fetched = []
+    orig = tg._fetch
+    tg._fetch = lambda sid, direction="csr": (
+        fetched.append(sid), orig(sid, direction))[1]
+    got, stats = bfs.bfs_dd_sparse(tg, src, fused=False)
     np.testing.assert_array_equal(ref, np.asarray(got))
     assert stats.h2d_bytes == stats.shards_streamed * tg.shard_bytes
-    sched = stats.edges_touched // tg.epd
-    assert stats.buffer_hits + stats.shards_streamed == sched
+    # every scheduled shard was either hit or streamed, and charged by its
+    # valid edges — never its padded epd slots
+    assert stats.buffer_hits + stats.shards_streamed == len(fetched)
+    assert stats.edges_touched == (
+        int(tg.shard_sizes[np.asarray(fetched)].sum()) if fetched else 0)
+
+
+@settings(max_examples=20, deadline=None)
+@given(gn=graph_strategy, nshards=st.integers(2, 7),
+       pool=st.integers(2, 7), src=st.integers(0, 59))
+def test_fused_equals_eager_equals_resident_bfs(gn, nshards, pool, src):
+    """Rung-fused streaming is invisible in everything but host syncs:
+    for ANY graph × cut × pool × source, fused streamed bfs (min relax)
+    is bitwise equal to eager streamed and to the in-memory run, with
+    identical h2d / streamed-shard / edge accounting (buffer_hits may
+    legitimately differ — a stretch touches each staged buffer once)."""
+    g, n = gn
+    src = src % n
+    ref = np.asarray(bfs.bfs_dd_sparse(g, src)[0])
+    out = {}
+    for fused in (False, True):
+        tg = tier_graph(g, nshards=nshards, resident_shards=pool)
+        labels, stats = bfs.bfs_dd_sparse(tg, src, fused=fused)
+        out[fused] = (np.asarray(labels), stats)
+    np.testing.assert_array_equal(ref, out[True][0])
+    np.testing.assert_array_equal(out[False][0], out[True][0])
+    eager, fus = out[False][1], out[True][1]
+    assert fus.h2d_bytes == eager.h2d_bytes
+    assert fus.shards_streamed == eager.shards_streamed
+    assert fus.edges_touched == eager.edges_touched
+    assert fus.rounds == eager.rounds
+
+
+@settings(max_examples=10, deadline=None)
+@given(gn=graph_strategy, nshards=st.integers(2, 5), pool=st.integers(2, 5))
+def test_fused_pagerank_det_add_bitwise_across_regimes(gn, nshards, pool):
+    """Under deterministic add, streamed residual-push pagerank is bitwise
+    identical fused vs eager for ANY graph × cut × pool — the stretch
+    folds the same shards in the same fixed order as the eager rounds."""
+    g, _ = gn
+    out = {}
+    with ops.deterministic_add_scope(True):
+        for fused in (False, True):
+            tg = tier_graph(g, nshards=nshards, resident_shards=pool)
+            eng_rank, stats = pagerank.pr_push(tg, max_iters=40) if fused \
+                else _pr_push_eager(tg)
+            out[fused] = np.asarray(eng_rank)
+    np.testing.assert_array_equal(out[False], out[True])
+
+
+def _pr_push_eager(tg):
+    """pr_push with the fused stretch disabled (run_streamed fused=False),
+    via the engine entry the public API wires to."""
+    from repro.core.algorithms.pagerank import _pr_streamed_fns
+    from repro.core.engine import run_streamed
+    import jax.numpy as jnp
+
+    valid = tg.valid_vertex_mask()
+    damping, tol = 0.85, 1e-9
+    rank0 = jnp.zeros((tg.n_pad,), jnp.float32)
+    resid0 = jnp.where(valid, 1.0 - damping, 0.0)
+    step, cond, active = _pr_streamed_fns(damping, tol)
+    _, (rank, resid) = run_streamed(tg, step, (rank0, resid0), cond, active,
+                                    40, fused=False)
+    rank = rank + resid
+    rank = jnp.where(valid, rank / jnp.sum(rank), 0.0)
+    return rank, None
 
 
 @settings(max_examples=30, deadline=None)
