@@ -24,10 +24,19 @@ what makes that true; this module makes CI *enforce* that it stays true:
   algorithm, with the lane-vs-per-source ``bitwise_equal`` flag set, and
   the warmed GraphServer row must clear the ``--min-qps`` floor — the
   acceptance contract of core/multisource.py + launch/graph_serve.py.
+* ``dynamic`` — gate the dynamic delta layer (``BENCH_dynamic.json``):
+  over the interleaved insert/query stream the incremental algorithms'
+  ``edges_touched`` must stay ≤ ``--max-work-frac`` (default 0.5×) of the
+  full-recompute column's, incremental answers must be bitwise equal to
+  from-scratch per batch and across compaction, the v3 store roundtrip
+  must preserve answers, and the deterministic-add pagerank replay must be
+  bitwise across pool sizes — the acceptance contract of core/dynamic.py.
 * ``trend`` — diff the current file against the previous successful main
   run's artifact: per-row wall-clock and ``comm_elems`` deltas land in
   the job summary, so the perf trajectory is visible per PR instead of
-  buried in artifact zips.
+  buried in artifact zips.  Passing two *directories* diffs every
+  ``BENCH_*.json`` this run produced against the same-named previous
+  artifact, each suite degrading independently on a missing baseline.
 
 Both subcommands are plain-stdlib (no jax import): they run in seconds on
 the bench job after the sweep.
@@ -264,22 +273,82 @@ def cmd_serve(args) -> int:
     return 0
 
 
-def cmd_trend(args) -> int:
-    cur = _load(args.bench)
-    # a missing/expired/corrupt baseline is the NORMAL first-run state of
-    # a trend job (new branch, artifact retention lapsed, torn upload) —
-    # degrade to a summary note and exit 0; only this run's own file is
-    # allowed to fail the job
-    try:
-        prev = _load(args.prev)
-    except (OSError, ValueError, KeyError, TypeError, AttributeError) as e:
-        _summary(["## bench trend", "",
-                  "no previous artifact to diff against "
-                  f"({type(e).__name__}: {e}) — trend resumes next run"])
-        return 0
+def cmd_dynamic(args) -> int:
+    rows = _load(args.bench)
     lines = [
-        f"## bench trend vs previous main run",
+        f"## dynamic delta gate (incremental ≤ {args.max_work_frac:g}× "
+        "recompute edges; bitwise across batches + compaction)",
         "",
+        "| check | value | gate |",
+        "|:------|:------|:-----|",
+    ]
+    failures = []
+
+    def flag(name, stats, key, label):
+        ok = bool(stats.get(key, 0))
+        lines.append(f"| {label} | {int(ok)} |"
+                     f" {'ok' if ok else '**FAIL**'} |")
+        if not ok:
+            failures.append(f"{name}: {key} unset")
+
+    inc = rows.get("dynamic/stream_incremental")
+    rec = rows.get("dynamic/stream_recompute")
+    if inc is None or rec is None:
+        failures.append("missing row dynamic/stream_incremental or "
+                        "dynamic/stream_recompute")
+        lines.append("| insert/query stream | — | MISSING |")
+    else:
+        ist = inc.get("stats") or {}
+        rst = rec.get("stats") or {}
+        ie, re_ = ist.get("edges_touched", 0), rst.get("edges_touched", 0)
+        if ie <= 0 or re_ <= 0:
+            failures.append("stream edges_touched missing/zero")
+            frac = float("inf")
+        else:
+            frac = ie / re_
+            if frac > args.max_work_frac:
+                failures.append(
+                    f"incremental touched {ie:,} edges > "
+                    f"{args.max_work_frac:g}× recompute's {re_:,} "
+                    f"(frac {frac:.2f})")
+        lines.append(
+            f"| incremental/recompute edges | {ie:,} / {re_:,} = "
+            f"{frac:.2f} (bar {args.max_work_frac:g}) |"
+            f" {'ok' if frac <= args.max_work_frac else '**FAIL**'} |")
+        flag("dynamic/stream_incremental", ist, "bitwise_equal",
+             "incremental ≡ from-scratch per batch")
+    pr = rows.get("dynamic/pr_incremental")
+    if pr is None:
+        failures.append("missing row dynamic/pr_incremental")
+        lines.append("| pr_incremental | — | MISSING |")
+    else:
+        pst = pr.get("stats") or {}
+        flag("dynamic/pr_incremental", pst, "allclose",
+             "pr warm chain allclose to scratch")
+        flag("dynamic/pr_incremental", pst, "det_bitwise",
+             "pr det-add replay bitwise across pools")
+    comp = rows.get("dynamic/compact")
+    if comp is None:
+        failures.append("missing row dynamic/compact")
+        lines.append("| compact | — | MISSING |")
+    else:
+        cst = comp.get("stats") or {}
+        flag("dynamic/compact", cst, "bitwise_after_compact",
+             "labels bitwise across compaction")
+        flag("dynamic/compact", cst, "roundtrip_equal",
+             "v3 store roundtrip preserves answers")
+        lines += ["", f"out-of-core ratio of the benchmark container: "
+                      f"{cst.get('budget_ratio', 0):.0f}×"]
+    _summary(lines)
+    if failures:
+        print("DYNAMIC GATE FAILED:", *failures, sep="\n  ", file=sys.stderr)
+        return 1
+    return 0
+
+
+def _trend_diff(cur: dict, prev: dict) -> list:
+    """Per-row markdown diff table body shared by both trend modes."""
+    lines = [
         "| row | wall µs (prev → cur) | Δ wall | comm_elems (prev → cur) |",
         "|:----|:---------------------|-------:|:------------------------|",
     ]
@@ -298,7 +367,52 @@ def cmd_trend(args) -> int:
     for name in prev:
         if name not in cur:
             lines.append(f"| {name} | row removed | — | — |")
-    _summary(lines)
+    return lines
+
+
+def cmd_trend(args) -> int:
+    # directory mode: diff EVERY BENCH_*.json artifact of this run against
+    # the same-named file from the previous main run's artifacts — one
+    # section per suite, each degrading independently when its baseline is
+    # missing (a new suite has no previous artifact on its first run)
+    if os.path.isdir(args.bench):
+        import glob
+
+        files = sorted(glob.glob(os.path.join(args.bench, "BENCH_*.json")))
+        if not files:
+            print(f"trend: no BENCH_*.json artifacts in {args.bench}",
+                  file=sys.stderr)
+            return 1
+        lines = ["## bench trend vs previous main run"]
+        for path in files:
+            name = os.path.basename(path)
+            cur = _load(path)  # this run's own artifact must parse
+            lines += ["", f"### {name}", ""]
+            try:
+                prev = _load(os.path.join(args.prev, name))
+            except (OSError, ValueError, KeyError, TypeError,
+                    AttributeError) as e:
+                lines.append("no previous artifact to diff against "
+                             f"({type(e).__name__}: {e}) — trend resumes "
+                             "next run")
+                continue
+            lines += _trend_diff(cur, prev)
+        _summary(lines)
+        return 0
+    cur = _load(args.bench)
+    # a missing/expired/corrupt baseline is the NORMAL first-run state of
+    # a trend job (new branch, artifact retention lapsed, torn upload) —
+    # degrade to a summary note and exit 0; only this run's own file is
+    # allowed to fail the job
+    try:
+        prev = _load(args.prev)
+    except (OSError, ValueError, KeyError, TypeError, AttributeError) as e:
+        _summary(["## bench trend", "",
+                  "no previous artifact to diff against "
+                  f"({type(e).__name__}: {e}) — trend resumes next run"])
+        return 0
+    _summary(["## bench trend vs previous main run", ""]
+             + _trend_diff(cur, prev))
     return 0
 
 
@@ -327,9 +441,20 @@ def main() -> None:
     sv.add_argument("--min-qps", type=float, default=5.0)
     sv.add_argument("--algos", default="bfs,sssp")
     sv.set_defaults(fn=cmd_serve)
-    tr = sub.add_parser("trend", help="diff against a previous run's json")
-    tr.add_argument("bench", help="BENCH_scaling.json from this run")
-    tr.add_argument("prev", help="BENCH_scaling.json from the previous run")
+    dy = sub.add_parser(
+        "dynamic", help="gate the dynamic delta layer: incremental work "
+                        "fraction vs recompute, per-batch bitwise equality, "
+                        "pr det-add reproducibility, compaction pinning")
+    dy.add_argument("bench", help="BENCH_dynamic.json from this run")
+    dy.add_argument("--max-work-frac", type=float, default=0.5,
+                    help="incremental/recompute edges_touched ceiling")
+    dy.set_defaults(fn=cmd_dynamic)
+    tr = sub.add_parser(
+        "trend", help="diff against a previous run's json; pass two "
+                      "directories to diff every BENCH_*.json artifact")
+    tr.add_argument("bench", help="BENCH_*.json from this run, or a "
+                                  "directory of them")
+    tr.add_argument("prev", help="the previous run's file or directory")
     tr.set_defaults(fn=cmd_trend)
     args = ap.parse_args()
     raise SystemExit(args.fn(args))

@@ -17,6 +17,7 @@ instead of throwing the numbers away with the process.
   comm_volume  §CVC         CVC vs full-mesh reduction volume, 1-8 devices
   outofcore    §Thesis      streamed shards vs all-resident pool (tiered)
   serving      §Serving     multi-source batched queries: amortization + QPS
+  dynamic      §Dynamic     edge-log deltas: incremental vs full recompute
   kernels      —            Pallas kernel µs/call
   roofline     §Roofline    reads experiments/dryrun/*.json
 """
@@ -26,9 +27,9 @@ import json
 import sys
 import traceback
 
-from . import (algo_classes, common, comm_volume, frameworks, granularity,
-               kernels_bench, memtier, outofcore, placement, roofline,
-               scaling, serving, vs_cluster)
+from . import (algo_classes, common, comm_volume, dynamic, frameworks,
+               granularity, kernels_bench, memtier, outofcore, placement,
+               roofline, scaling, serving, vs_cluster)
 
 SUITES = {
     "memtier": memtier,
@@ -41,6 +42,7 @@ SUITES = {
     "comm_volume": comm_volume,
     "outofcore": outofcore,
     "serving": serving,
+    "dynamic": dynamic,
     "kernels": kernels_bench,
     "roofline": roofline,
 }
@@ -55,8 +57,17 @@ def main() -> None:
                     help="persist rows (+ RunStats) as JSON: "
                          "BENCH_<suite>.json per suite, or PATH when "
                          "exactly one suite is selected")
+    ap.add_argument("--list", action="store_true",
+                    help="print available suite names and exit")
     args = ap.parse_args()
+    if args.list:
+        print("\n".join(SUITES))
+        return
     names = args.suite or list(SUITES)
+    unknown = [n for n in names if n not in SUITES]
+    if unknown:
+        ap.error(f"unknown suite(s) {', '.join(unknown)}; "
+                 f"available: {', '.join(SUITES)}")
     if args.emit_json not in (None, "auto") and len(names) != 1:
         ap.error("--emit-json PATH needs exactly one --suite "
                  "(omit PATH for per-suite BENCH_<suite>.json files)")

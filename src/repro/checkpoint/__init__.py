@@ -1,3 +1,4 @@
 from .manager import (CheckpointManager, RunCheckpointer,  # noqa: F401
-                      latest_step, load_pytree, open_graph,
-                      restore_resharded, save_graph, save_pytree)
+                      latest_step, load_pytree, open_dynamic, open_graph,
+                      restore_resharded, save_dynamic, save_graph,
+                      save_pytree)

@@ -4,8 +4,9 @@
 # Gill et al., "Single Machine Graph Analytics on Massive Datasets Using
 # Intel Optane DC Persistent Memory" (2019) — adapted to TPU/JAX.
 from . import algorithms, engine, faultio, frontier, graph  # noqa: F401
-from . import multisource, operators, partition, placement  # noqa: F401
-from . import sharded, tiered  # noqa: F401
+from . import dynamic, multisource, operators, partition  # noqa: F401
+from . import placement, sharded, tiered  # noqa: F401
+from .dynamic import DeltaBatch, DynamicGraph, dynamize  # noqa: F401
 from .faultio import (FaultInjector, FaultSpec, InjectedIOError,  # noqa: F401
                       ShardCorruptError)
 from .graph import Graph, from_coo  # noqa: F401

@@ -140,6 +140,27 @@ def bfs_dd_sparse(g: Graph, src: int, max_rounds: int = 100_000,
     return dist, eng.stats
 
 
+def bfs_incremental(g, dist, delta, max_rounds: int = 100_000,
+                    fused: bool = True, checkpointer=None):
+    """Re-converge BFS distances after a :class:`~..dynamic.DeltaBatch`.
+
+    Inserts only shorten paths, so the converged ``dist`` stays a valid
+    upper bound on the updated graph — the min-relax fixpoint is reached
+    by seeding the ladder with just the batch's dirty sources (already
+    reached ones; an unreached source has nothing to propagate) instead of
+    restarting from the root.  The fixpoint is unique and every relax uses
+    the same ``dist[src] + w`` message arithmetic, so the result is
+    **bitwise** equal to a from-scratch ``bfs_dd_sparse`` on the updated
+    container — the contract ``tests/test_dynamic*.py`` pin per batch and
+    across compactions."""
+    dirty = fr.dense_from_indices(
+        jnp.asarray(delta.dirty.astype(jnp.int32)), g.n_pad).mask
+    mask0 = dirty & (dist != INF)
+    eng = SparseLadderEngine(g, _sparse_step, _dense_step, fused=fused)
+    dist, _ = eng.run(dist, mask0, max_rounds, checkpointer=checkpointer)
+    return dist, eng.stats
+
+
 def _in_degrees(g) -> jax.Array:
     """(n_pad,) in-degree, from the CSC mirror.  Plain graphs carry it;
     sharded CSC mirrors don't, so count the flat in-edge destinations once

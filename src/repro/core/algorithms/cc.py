@@ -138,6 +138,26 @@ def cc_dd_sparse(g: Graph, max_rounds: int = 100_000, fused: bool = True):
     return lab, eng.stats
 
 
+def cc_incremental(g, labels, delta, max_rounds: int = 100_000,
+                   fused: bool = True):
+    """Re-converge CC labels after a :class:`~..dynamic.DeltaBatch`.
+
+    Inserts only merge components (labels are int min-flood values — they
+    can only decrease), so the converged ``labels`` remain a valid
+    starting point on the updated graph; the flood restarts from the
+    batch's dirty endpoints alone.  The batch must have been applied with
+    ``symmetrize=True`` (this module's undirected contract), which puts
+    *both* endpoints of every insert in ``delta.dirty`` — each side can
+    then pull the other's component minimum across the new edge.  Exact
+    integer min ⇒ the fixpoint is unique and the result is **bitwise**
+    equal to a from-scratch ``cc_dd_sparse`` on the updated container."""
+    mask0 = fr.dense_from_indices(
+        jnp.asarray(delta.dirty.astype(jnp.int32)), g.n_pad).mask
+    eng = SparseLadderEngine(g, _cc_sparse_step, _cc_dense_step, fused=fused)
+    lab, _ = eng.run(labels, mask0, max_rounds)
+    return lab, eng.stats
+
+
 VARIANTS = {
     "labelprop": cc_labelprop,
     "labelprop_sc": cc_labelprop_sc,

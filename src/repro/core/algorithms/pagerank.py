@@ -11,13 +11,25 @@
 from __future__ import annotations
 
 from functools import lru_cache
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from ...kernels import graph_ops as gk
 from .. import operators as ops
 from ..engine import RunStats, run_dense, run_host, run_streamed
 from ..graph import Graph
+
+
+class PRState(NamedTuple):
+    """Un-normalised (rank, residual) pair carried between incremental
+    solves — the push invariant ``resid = (1-d)·1 − rank + d·P rank``
+    holds for it at every point, which is what lets a delta batch be
+    absorbed as a residual correction instead of a recompute."""
+
+    rank: jax.Array
+    resid: jax.Array
 
 
 def pr_pull(
@@ -64,16 +76,24 @@ def pr_pull(
 
 
 @lru_cache(maxsize=None)
-def _pr_streamed_fns(damping: float, tol: float):
+def _pr_streamed_fns(damping: float, tol: float, absolute: bool = False):
     """(step, cond, active) triple for the streamed pr_push — cached per
     (damping, tol) so the jitted staged stretch's trace cache keys on
     stable function identities.  The step recomputes ``valid``/``outdeg``
     from the container it is handed (TieredGraph or StagedShards carry
-    the same device arrays), so it traces cleanly inside the stretch."""
+    the same device arrays), so it traces cleanly inside the stretch.
+
+    ``absolute=True`` gates activity on ``|resid| > tol`` — incremental
+    warm starts carry *signed* residuals (an insert lowers 1/out_deg, so
+    the correction subtracts mass along pre-existing edges) and negative
+    residual must drain the same way positive residual spreads."""
+    def gate(resid):
+        return (jnp.abs(resid) if absolute else resid) > tol
+
     def step(gr, state):
         rank, resid = state
         outdeg = jnp.maximum(gr.out_deg.astype(jnp.float32), 1.0)
-        active = resid > tol
+        active = gate(resid)
         rank = rank + jnp.where(active, resid, 0.0)
         push_val = jnp.where(active, damping * resid / outdeg, 0.0)
         added = ops.push_dense(
@@ -83,12 +103,37 @@ def _pr_streamed_fns(damping: float, tol: float):
         return rank, resid
 
     def cond(state):
-        return jnp.any(state[1] > tol)
+        return jnp.any(gate(state[1]))
 
     def active_fn(gr, state):
-        return state[1] > tol
+        return gate(state[1])
 
     return step, cond, active_fn
+
+
+def _pr_push_raw(g, damping, tol, max_iters, checkpointer=None, state0=None,
+                 absolute=False):
+    """Run the residual-push iteration to convergence from ``state0`` (or
+    the cold uniform start) and return the raw ``(rank, resid, rounds)`` —
+    no residual fold-in, no normalisation, so the result can seed a later
+    warm solve.  Dispatch is the same as ``pr_push``: tiered containers go
+    through ``run_streamed``, resident graphs through ``run_dense``."""
+    if state0 is None:
+        valid = g.valid_vertex_mask()
+        rank0 = jnp.zeros((g.n_pad,), jnp.float32)
+        resid0 = jnp.where(valid, 1.0 - damping, 0.0)
+    else:
+        rank0, resid0 = state0
+    sstep, scond, sactive = _pr_streamed_fns(float(damping), float(tol),
+                                             bool(absolute))
+    if getattr(g, "is_tiered", False):
+        rounds, (rank, resid) = run_streamed(
+            g, sstep, (rank0, resid0), scond, sactive, max_iters,
+            checkpointer=checkpointer)
+    else:
+        rounds, (rank, resid) = run_dense(
+            lambda s: sstep(g, s), (rank0, resid0), scond, max_iters)
+    return rank, resid, rounds
 
 
 def pr_push(
@@ -108,38 +153,17 @@ def pr_push(
     ``operators.set_deterministic_add(True)`` (float add order is fixed),
     allclose otherwise.
     """
-    valid = g.valid_vertex_mask()
-    outdeg = jnp.maximum(g.out_deg.astype(jnp.float32), 1.0)
-    rank0 = jnp.zeros((g.n_pad,), jnp.float32)
-    resid0 = jnp.where(valid, 1.0 - damping, 0.0)
-
-    def step(state):
-        rank, resid = state
-        active = resid > tol
-        rank = rank + jnp.where(active, resid, 0.0)
-        push_val = jnp.where(active, damping * resid / outdeg, 0.0)
-        added = ops.push_dense(
-            g, push_val, active, jnp.zeros_like(resid), kind="add", use_weight=False
-        )
-        resid = jnp.where(active, 0.0, resid) + added
-        return rank, resid
-
     # a tiered graph streams edge shards from host state, so rounds
     # dispatch through run_streamed: stable residual-active shard sets
     # fuse into device-resident stretches, the edge / h2d accounting comes
     # from the graph's stream counters instead of rounds·m, and the same
     # host boundaries carry the crash-recovery hooks (checkpointer; an
     # attached fault injector forces the per-round eager path)
+    valid = g.valid_vertex_mask()
     tiered = getattr(g, "is_tiered", False)
     io0 = g.io.snapshot() if tiered else None
-    if tiered:
-        sstep, scond, sactive = _pr_streamed_fns(float(damping), float(tol))
-        rounds, (rank, resid) = run_streamed(
-            g, sstep, (rank0, resid0), scond, sactive, max_iters,
-            checkpointer=checkpointer)
-    else:
-        rounds, (rank, resid) = run_dense(
-            step, (rank0, resid0), lambda s: jnp.any(s[1] > tol), max_iters)
+    rank, resid, rounds = _pr_push_raw(g, damping, tol, max_iters,
+                                       checkpointer=checkpointer)
     rank = rank + resid  # fold in the leftover residual
     rank = jnp.where(valid, rank / jnp.sum(rank), 0.0)
     stats = RunStats.from_graph(
@@ -149,6 +173,89 @@ def pr_push(
     if tiered:
         g.io.fold_delta(stats, io0)
     return rank, stats
+
+
+def _delta_correction(g, delta, rank, resid, damping):
+    """Fold an accepted edge batch into the push invariant.
+
+    With od = max(out_deg, 1), the invariant maintained by every push round
+    is  ``resid = (1-d)·1 − rank + d·Pᵀ rank``  where column v of P scales
+    by 1/od[v].  Moving from graph G to G′ = G + delta changes P in exactly
+    two ways: every pre-existing out-edge of a dirty source rescales from
+    1/od_old to 1/od_new, and the delta edges appear with weight 1/od_new.
+    Since delta sources gained exactly the delta edges:
+
+        resid' = resid + d·[ push_{G'}(rank·(1/od_new − 1/od_old), dirty)
+                             + Σ_{(u,v)∈delta} rank[u]/od_old[u] at v ]
+
+    (the second term rewrites the delta edges' 1/od_new contribution plus
+    the rescale double-count into the old-degree form; previously-dangling
+    sources work out because od_old = 1 and their old column is empty).
+    The first term relaxes through the container itself — the delta edges
+    already sit in its logs — and the second is a fixed-order
+    ``det_scatter_add`` over the batch, so the correction is deterministic
+    whenever the container's adds are."""
+    od_new = jnp.maximum(g.out_deg.astype(jnp.float32), 1.0)
+    od_old = jnp.maximum(
+        jnp.asarray(delta.old_out_deg).astype(jnp.float32), 1.0)
+    dirty = jnp.zeros((g.n_pad,), bool)
+    dirty = dirty.at[jnp.asarray(delta.dirty.astype(jnp.int32))].set(True)
+    val = jnp.where(dirty, rank * (1.0 / od_new - 1.0 / od_old), 0.0)
+    scaled = ops.push_dense(g, val, dirty, jnp.zeros_like(rank), kind="add",
+                            use_weight=False)
+    src = jnp.asarray(delta.src.astype(jnp.int32))
+    dst = jnp.asarray(delta.dst.astype(jnp.int32))
+    fresh = gk.det_scatter_add(dst, rank[src] / od_old[src],
+                               jnp.zeros_like(rank))
+    return resid + damping * (scaled + fresh)
+
+
+def pr_incremental(
+    g,
+    delta=None,
+    state: PRState | None = None,
+    damping: float = 0.85,
+    tol: float = 1e-9,
+    max_iters: int = 10_000,
+    checkpointer=None,
+):
+    """Incremental residual-push PageRank over a :class:`~..dynamic.DynamicGraph`.
+
+    Cold call (``state=None``): a from-scratch ``pr_push`` solve that also
+    returns its raw :class:`PRState`.  Warm call: the accepted
+    ``DeltaBatch`` becomes a residual correction (``_delta_correction``)
+    and the ladder re-converges from the dirty neighbourhood — only
+    vertices whose residual the batch disturbed go active, so work scales
+    with the perturbation, not with n.  The returned rank is normalised
+    like ``pr_push``'s; the returned state is raw, to seed the next batch.
+
+    Equality contract: allclose to a from-scratch ``pr_push`` on the
+    updated container (the warm solve stops at a different residual
+    profile below tol), and bitwise *reproducible* — same container, same
+    batch history, any pool size / substrate / fused-vs-eager regime —
+    under ``operators.set_deterministic_add(True)``."""
+    valid = g.valid_vertex_mask()
+    tiered = getattr(g, "is_tiered", False)
+    io0 = g.io.snapshot() if tiered else None
+    if state is None:
+        rank, resid, rounds = _pr_push_raw(g, damping, tol, max_iters,
+                                           checkpointer=checkpointer)
+    else:
+        rank0, resid0 = state.rank, state.resid
+        if delta is not None and delta.inserted:
+            resid0 = _delta_correction(g, delta, rank0, resid0, damping)
+        rank, resid, rounds = _pr_push_raw(
+            g, damping, tol, max_iters, checkpointer=checkpointer,
+            state0=(rank0, resid0), absolute=True)
+    out = rank + resid
+    out = jnp.where(valid, out / jnp.sum(out), 0.0)
+    stats = RunStats.from_graph(
+        g, relaxes=int(rounds), rounds=int(rounds),
+        edges_touched=0 if tiered else int(rounds) * g.m,
+        dense_rounds=int(rounds))
+    if tiered:
+        g.io.fold_delta(stats, io0)
+    return out, stats, PRState(rank=rank, resid=resid)
 
 
 def ppr_push(

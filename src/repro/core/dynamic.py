@@ -1,0 +1,527 @@
+"""Dynamic graph deltas: a per-shard edge-log layer over the immutable CSR.
+
+The persistent tiers (``Graph`` in DRAM, ``TieredGraph`` over the shard
+store) are immutable by design — the paper's runtime principles assume a
+frozen CSR.  ``DynamicGraph`` adds a mutable layer on top without touching
+that contract:
+
+- every shard of the base cut gets an *edge log*: an append-only (src, dst,
+  w) triple holding inserts homed to that shard's vertex range,
+- the seam-level relax folds log edges **after** the base-CSR fold, in
+  ascending shard order, so the deterministic-add contract survives — the
+  fold order is a pure function of the container state, not of insertion
+  history,
+- ``compact()`` merges the logs back into canonical (src, dst)-sorted CSR
+  order and rebuilds the tiered cut, after which the container is bitwise
+  indistinguishable from one built from scratch on the merged edge list.
+
+Logs are small and hot, so they live on device permanently (a fast mutable
+tier in front of the streamed base shards); the I/O ledger charges their
+edges as relax work but not as host→device traffic.
+
+``apply_batch`` is insert-if-absent: self-loops are dropped, duplicates
+within a batch keep the minimum weight (the same rule ``from_coo`` applies),
+and edges already present in the base CSR or an earlier log are dropped.
+Accepted edges are appended in ascending (src, dst) key order, which makes
+the log state — and therefore every subsequent fold — invariant to the
+permutation of the input batch.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import Graph, from_coo
+from .tiered import StagedShards, TieredGraph, _round_live, _shard_relax, tier_graph
+
+
+@dataclass(frozen=True, eq=False)
+class DeltaBatch:
+    """Accepted edges from one ``apply_batch`` call, in canonical order."""
+
+    src: np.ndarray
+    dst: np.ndarray
+    w: np.ndarray
+    dirty: np.ndarray          # unique accepted source vertices
+    old_out_deg: np.ndarray    # (n_pad,) int32 snapshot before the batch
+    requested: int             # edges in the caller's batch (pre-filtering)
+
+    @property
+    def inserted(self) -> int:
+        return int(self.src.size)
+
+
+@partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("base", "logs", "out_deg"),
+    meta_fields=("log_sids",),
+)
+@dataclass(frozen=True)
+class StagedDynamic:
+    """Device-resident stage: staged base shards plus the live shard logs.
+
+    Folding order inside ``tiered_push_dense`` is base shards ascending,
+    then log shards ascending — the same order the eager path uses, so a
+    fused stretch is bitwise identical to per-round execution under
+    deterministic add.
+    """
+
+    base: StagedShards
+    logs: tuple  # ((src, dst, w) device triples, one per sid in log_sids)
+    out_deg: jnp.ndarray  # dynamic out-degree (base + logs)
+    log_sids: tuple
+
+    is_tiered = True
+    ndev = 1
+    placement = "dynamic"
+    has_csc = False
+
+    @property
+    def n(self):
+        return self.base.n
+
+    @property
+    def n_pad(self):
+        return self.base.n_pad
+
+    @property
+    def m(self):
+        return self.base.m
+
+    @property
+    def block_size(self):
+        return self.base.block_size
+
+    @property
+    def nshards(self):
+        return self.base.nshards
+
+    @property
+    def epd(self):
+        return self.base.epd
+
+    @property
+    def sentinel(self):
+        return self.base.sentinel
+
+    @property
+    def live(self):
+        return self.base.live
+
+    def valid_vertex_mask(self):
+        return self.base.valid_vertex_mask()
+
+    def vertex_full(self, fill, dtype=jnp.float32):
+        return self.base.vertex_full(fill, dtype)
+
+    def budget_edge_mass(self, mask):
+        return jnp.sum(jnp.where(mask, self.out_deg, 0))
+
+    def round_live(self, mask):
+        return _round_live(self.base.owner, self.out_deg, mask, self.base.nshards)
+
+    def tiered_push_dense(self, src_val, active, out_init, kind, use_weight,
+                          substrate, reverse=False, det=False):
+        acc = self.base.tiered_push_dense(
+            src_val, active, out_init, kind, use_weight, substrate,
+            reverse=reverse, det=det)
+        for s, d, w in self.logs:
+            acc = _shard_relax(
+                s, d, w, src_val, active, acc,
+                kind=kind, use_weight=use_weight, sub=substrate, det=det,
+                reverse=reverse)
+        return acc
+
+
+class DynamicGraph:
+    """Mutable edge-log layer over a :class:`TieredGraph` base.
+
+    Satisfies the same tiered duck-type protocol the engine and operator
+    seams dispatch on (``is_tiered``, ``tiered_push_dense``, ``round_live``,
+    ``stage``/``charge_staged_rounds``, ``live_edges``), so every algorithm
+    that runs on a ``TieredGraph`` runs unchanged on a ``DynamicGraph``.
+    """
+
+    is_tiered = True
+    ndev = 1
+    placement = "dynamic"
+
+    def __init__(self, base: TieredGraph):
+        self.base = base
+        ns = base.nshards
+        self._log = [
+            (np.zeros(0, np.int32), np.zeros(0, np.int32), np.zeros(0, np.float32))
+            for _ in range(ns)
+        ]
+        # int64 (src * n_pad + dst) keys, kept sorted, for membership tests
+        self._log_keys = [np.zeros(0, np.int64) for _ in range(ns)]
+        self._base_keys = [None] * ns  # lazy per-shard key cache
+        self._log_dev = {}   # sid -> padded device triple
+        self._lpd = 0        # current uniform log pad (power-of-two ladder)
+        self._live_hint = None
+        self.m = base.m
+        self._out_deg_np = np.asarray(jax.device_get(base.out_deg)).copy()
+        self.out_deg = jnp.asarray(self._out_deg_np)
+
+    # ---- static geometry delegates -------------------------------------
+
+    @property
+    def n(self):
+        return self.base.n
+
+    @property
+    def n_pad(self):
+        return self.base.n_pad
+
+    @property
+    def block_size(self):
+        return self.base.block_size
+
+    @property
+    def nshards(self):
+        return self.base.nshards
+
+    @property
+    def epd(self):
+        return self.base.epd
+
+    @property
+    def m_pad(self):
+        return self.base.m_pad
+
+    @property
+    def sentinel(self):
+        return self.base.sentinel
+
+    @property
+    def vtx_bounds(self):
+        return self.base.vtx_bounds
+
+    @property
+    def owner(self):
+        return self.base.owner
+
+    @property
+    def io(self):
+        return self.base.io
+
+    @property
+    def fault(self):
+        return self.base.fault
+
+    @property
+    def resident_shards(self):
+        return self.base.resident_shards
+
+    @property
+    def shard_bytes(self):
+        return self.base.shard_bytes
+
+    @property
+    def csr_bytes(self):
+        return self.base.csr_bytes
+
+    @property
+    def resident_budget(self):
+        return self.base.resident_budget
+
+    @property
+    def has_csc(self):
+        # Logs carry no CSC mirror; pull-mode callers must compact() first.
+        return False
+
+    def set_fault_injector(self, fault):
+        self.base.set_fault_injector(fault)
+
+    def valid_vertex_mask(self):
+        return self.base.valid_vertex_mask()
+
+    def vertex_full(self, fill, dtype=jnp.float32):
+        return self.base.vertex_full(fill, dtype)
+
+    def budget_edge_mass(self, mask):
+        return jnp.sum(jnp.where(mask, self.out_deg, 0))
+
+    @property
+    def log_sizes(self):
+        return [s.size for s, _, _ in self._log]
+
+    # ---- membership ----------------------------------------------------
+
+    def _base_key(self, sid: int) -> np.ndarray:
+        cached = self._base_keys[sid]
+        if cached is None:
+            s, d, _ = self.base._host[sid]
+            # Padded tail rows are (sentinel, sentinel) — the largest key —
+            # and real rows are (src, dst)-sorted, so keys are sorted as-is.
+            cached = s.astype(np.int64) * np.int64(self.n_pad) + d.astype(np.int64)
+            self._base_keys[sid] = cached
+        return cached
+
+    @staticmethod
+    def _sorted_contains(haystack: np.ndarray, needles: np.ndarray) -> np.ndarray:
+        if haystack.size == 0:
+            return np.zeros(needles.shape, bool)
+        pos = np.searchsorted(haystack, needles)
+        pos = np.minimum(pos, haystack.size - 1)
+        return haystack[pos] == needles
+
+    def _present(self, key: np.ndarray, home: np.ndarray) -> np.ndarray:
+        hit = np.zeros(key.shape, bool)
+        for sid in np.unique(home):
+            sel = home == sid
+            k = key[sel]
+            found = self._sorted_contains(self._base_key(int(sid)), k)
+            found |= self._sorted_contains(self._log_keys[int(sid)], k)
+            hit[sel] = found
+        return hit
+
+    # ---- mutation ------------------------------------------------------
+
+    def apply_batch(self, src, dst, w=None, *, symmetrize=False) -> DeltaBatch:
+        """Insert a batch of edges; returns the accepted, canonicalised delta.
+
+        Insert-if-absent: self-loops are dropped, in-batch duplicates keep
+        the minimum weight, and (src, dst) pairs already present in the base
+        CSR or the logs are dropped.  With ``symmetrize=True`` both edge
+        directions are inserted (required for CC's undirected contract).
+        """
+        src = np.asarray(src, np.int64).reshape(-1)
+        dst = np.asarray(dst, np.int64).reshape(-1)
+        if src.shape != dst.shape:
+            raise ValueError("src/dst shape mismatch")
+        requested = int(src.size)
+        if w is None:
+            w = np.ones(src.shape, np.float32)
+        else:
+            w = np.asarray(w, np.float32).reshape(-1)
+            if w.shape != src.shape:
+                raise ValueError("w shape mismatch")
+        if symmetrize:
+            src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+            w = np.concatenate([w, w])
+        if src.size and (src.min() < 0 or src.max() >= self.n
+                         or dst.min() < 0 or dst.max() >= self.n):
+            raise ValueError(f"edge endpoints must lie in [0, {self.n})")
+        old_out_deg = self._out_deg_np.copy()
+
+        keep = src != dst
+        src, dst, w = src[keep], dst[keep], w[keep]
+        # in-batch dedup, min weight per (src, dst) — from_coo's exact rule
+        key = src * np.int64(self.n_pad) + dst
+        order = np.lexsort((w, key))
+        key, src, dst, w = key[order], src[order], dst[order], w[order]
+        _, first = np.unique(key, return_index=True)
+        key, src, dst, w = key[first], src[first], dst[first], w[first]
+
+        vb = np.asarray(self.vtx_bounds)
+        home = np.searchsorted(vb, src, side="right") - 1
+        if key.size:
+            fresh = ~self._present(key, home)
+            key, src, dst, w, home = (
+                key[fresh], src[fresh], dst[fresh], w[fresh], home[fresh])
+
+        for sid in np.unique(home):
+            sel = home == sid
+            sid = int(sid)
+            ls, ld, lw = self._log[sid]
+            self._log[sid] = (
+                np.concatenate([ls, src[sel].astype(np.int32)]),
+                np.concatenate([ld, dst[sel].astype(np.int32)]),
+                np.concatenate([lw, w[sel]]),
+            )
+            self._log_keys[sid] = np.sort(
+                np.concatenate([self._log_keys[sid], key[sel]]))
+            self._log_dev.pop(sid, None)
+
+        if src.size:
+            np.add.at(self._out_deg_np, src, 1)
+            self.out_deg = jnp.asarray(self._out_deg_np)
+            self.m += int(src.size)
+        return DeltaBatch(
+            src=src, dst=dst, w=w,
+            dirty=np.unique(src),
+            old_out_deg=old_out_deg,
+            requested=requested,
+        )
+
+    # ---- device log cache ----------------------------------------------
+
+    def _log_pad(self) -> int:
+        top = max(self.log_sizes, default=0)
+        lpd = 8
+        while lpd < top:
+            lpd *= 2
+        return lpd
+
+    def _fetch_log(self, sid: int):
+        lpd = self._log_pad()
+        if lpd != self._lpd:
+            self._log_dev.clear()
+            self._lpd = lpd
+        cached = self._log_dev.get(sid)
+        if cached is not None:
+            return cached
+        s, d, w = self._log[sid]
+        pad = lpd - s.size
+        sent = np.int32(self.sentinel)
+        triple = (
+            jax.device_put(jnp.asarray(np.concatenate([s, np.full(pad, sent, np.int32)]))),
+            jax.device_put(jnp.asarray(np.concatenate([d, np.full(pad, sent, np.int32)]))),
+            jax.device_put(jnp.asarray(np.concatenate([w, np.zeros(pad, np.float32)]))),
+        )
+        self._log_dev[sid] = triple
+        return triple
+
+    # ---- tiered protocol -----------------------------------------------
+
+    def round_live(self, mask):
+        # Dynamic out-degree: a shard whose only edges live in its log must
+        # still count as live when one of its sources is active.
+        return _round_live(self.base.owner, self.out_deg, mask, self.nshards)
+
+    def set_live_hint(self, live):
+        self._live_hint = live
+
+    def live_edges(self, live) -> int:
+        ids = np.flatnonzero(np.asarray(live))
+        sizes = np.asarray(self.base.shard_sizes)
+        logs = self.log_sizes
+        return int(sizes[ids].sum()) + sum(logs[i] for i in ids)
+
+    def charge_staged_rounds(self, k: int, live) -> None:
+        self.io.edges_relaxed += k * self.live_edges(live)
+
+    def stage(self, live):
+        sb = self.base.stage(live)
+        if sb is None:
+            return None
+        log_sids = tuple(s for s in sb.sids if self._log[s][0].size)
+        return StagedDynamic(
+            base=sb,
+            logs=tuple(self._fetch_log(s) for s in log_sids),
+            out_deg=self.out_deg,
+            log_sids=log_sids,
+        )
+
+    def tiered_push_dense(self, src_val, active, out_init, kind, use_weight,
+                          substrate, reverse=False, det=False):
+        hint = self._live_hint
+        self._live_hint = None
+        if reverse:
+            raise NotImplementedError(
+                "DynamicGraph has no CSC mirror for the logs; compact() first")
+        if hint is None:
+            _, live = jax.device_get(self.round_live(active))
+            hint = np.asarray(live)
+        self.base.set_live_hint(hint)
+        acc = self.base.tiered_push_dense(
+            src_val, active, out_init, kind, use_weight, substrate,
+            reverse=False, det=det)
+        sched = np.flatnonzero(np.asarray(hint))
+        logsched = [int(s) for s in sched if self._log[int(s)][0].size]
+        if logsched:
+            self.io.edges_relaxed += sum(self._log[s][0].size for s in logsched)
+            nxt = self._fetch_log(logsched[0])
+            for i, sid in enumerate(logsched):
+                s, d, w = nxt
+                if i + 1 < len(logsched):
+                    nxt = self._fetch_log(logsched[i + 1])
+                acc = _shard_relax(
+                    s, d, w, src_val, active, acc,
+                    kind=kind, use_weight=use_weight, sub=substrate, det=det,
+                    reverse=False)
+        return acc
+
+    def tiered_pull_dense(self, *args, **kwargs):
+        raise NotImplementedError(
+            "pull-mode needs a CSC mirror; DynamicGraph logs are push-only — "
+            "compact() to fold them into the canonical store")
+
+    # ---- compaction ----------------------------------------------------
+
+    def compact(self) -> None:
+        """Merge all logs into the base CSR and rebuild the tiered cut.
+
+        After compaction the container is bitwise indistinguishable from a
+        ``TieredGraph`` built from scratch on the merged edge list: edges
+        return to canonical (src, dst)-sorted order and the logs are empty.
+        """
+        base = self.base
+        sizes = np.asarray(base.shard_sizes)
+        parts_s, parts_d, parts_w = [], [], []
+        for sid in range(base.nshards):
+            s, d, w = base._host[sid]
+            k = int(sizes[sid])
+            parts_s.append(s[:k].astype(np.int64))
+            parts_d.append(d[:k].astype(np.int64))
+            parts_w.append(w[:k])
+            ls, ld, lw = self._log[sid]
+            parts_s.append(ls.astype(np.int64))
+            parts_d.append(ld.astype(np.int64))
+            parts_w.append(lw)
+        src = np.concatenate(parts_s)
+        dst = np.concatenate(parts_d)
+        w = np.concatenate(parts_w)
+        g = from_coo(src, dst, self.n, weights=w,
+                     block_size=self.block_size,
+                     build_csc=base.has_csc, dedup=False)
+        assert g.m == self.m, "compaction must not change edge count"
+        new = tier_graph(g, base.nshards, base.resident_shards,
+                         build_csc=base.has_csc)
+        new.io = base.io
+        new.fault = base.fault
+        new.retry = base.retry
+        self.base = new
+        ns = new.nshards
+        self._log = [
+            (np.zeros(0, np.int32), np.zeros(0, np.int32), np.zeros(0, np.float32))
+            for _ in range(ns)
+        ]
+        self._log_keys = [np.zeros(0, np.int64) for _ in range(ns)]
+        self._base_keys = [None] * ns
+        self._log_dev = {}
+        self._lpd = 0
+        self._live_hint = None
+        self._out_deg_np = np.asarray(jax.device_get(new.out_deg)).copy()
+        self.out_deg = jnp.asarray(self._out_deg_np)
+
+    # ---- store restore -------------------------------------------------
+
+    def _restore_logs(self, host) -> None:
+        """Install per-shard log triples loaded from a v3 store."""
+        total = 0
+        for sid, (s, d, w) in enumerate(host):
+            s = np.asarray(s, np.int32)
+            d = np.asarray(d, np.int32)
+            w = np.asarray(w, np.float32)
+            self._log[sid] = (s, d, w)
+            self._log_keys[sid] = np.sort(
+                s.astype(np.int64) * np.int64(self.n_pad) + d.astype(np.int64))
+            if s.size:
+                np.add.at(self._out_deg_np, s, 1)
+                total += int(s.size)
+        if total:
+            self.out_deg = jnp.asarray(self._out_deg_np)
+            self.m += total
+        self._log_dev = {}
+        self._lpd = 0
+
+
+def dynamize(g, nshards: int = 8, resident_shards=None, *,
+             resident_bytes=None, build_csc: bool = False) -> DynamicGraph:
+    """Wrap a ``Graph`` or ``TieredGraph`` in a :class:`DynamicGraph`."""
+    if isinstance(g, TieredGraph):
+        return DynamicGraph(g)
+    if not isinstance(g, Graph):
+        raise TypeError(f"cannot dynamize {type(g).__name__}")
+    if resident_shards is None and resident_bytes is None:
+        resident_shards = nshards  # in-memory convenience: fully resident
+    return DynamicGraph(tier_graph(
+        g, nshards, resident_shards if resident_shards is not None else 2,
+        resident_bytes=resident_bytes, build_csc=build_csc))

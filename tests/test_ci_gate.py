@@ -73,3 +73,117 @@ def test_trend_still_fails_on_this_runs_own_file(tmp_path):
     prev = _bench(tmp_path, "prev.json", _rows())
     with pytest.raises(OSError):
         _trend(str(tmp_path / "missing_cur.json"), prev)
+
+
+# ---------------------------------------------------------------------------
+# directory mode: every BENCH_*.json diffs, each degrading independently
+# ---------------------------------------------------------------------------
+
+def _dirs(tmp_path):
+    cur, prev = tmp_path / "cur", tmp_path / "prev"
+    cur.mkdir(), prev.mkdir()
+    return cur, prev
+
+
+def test_trend_dir_diffs_all_artifacts(tmp_path, capsys):
+    cur, prev = _dirs(tmp_path)
+    _bench(cur, "BENCH_scaling.json", _rows(wall=120.0))
+    _bench(cur, "BENCH_serving.json", _rows(wall=90.0))
+    _bench(prev, "BENCH_scaling.json", _rows(wall=100.0))
+    _bench(prev, "BENCH_serving.json", _rows(wall=100.0))
+    rc = _trend(str(cur), str(prev))
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "bench trend vs previous main run" in out
+    assert "### BENCH_scaling.json" in out
+    assert "### BENCH_serving.json" in out
+    assert "+20%" in out and "-10%" in out
+
+
+def test_trend_dir_degrades_per_file(tmp_path, capsys):
+    # one suite has a baseline, the new suite doesn't: the new suite's
+    # section degrades to a note, the other still diffs, rc stays 0
+    cur, prev = _dirs(tmp_path)
+    _bench(cur, "BENCH_scaling.json", _rows(wall=120.0))
+    _bench(cur, "BENCH_dynamic.json", _rows(wall=50.0))
+    _bench(prev, "BENCH_scaling.json", _rows(wall=100.0))
+    rc = _trend(str(cur), str(prev))
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "+20%" in out
+    assert "### BENCH_dynamic.json" in out
+    assert "no previous artifact" in out
+    assert "trend resumes next run" in out
+
+
+def test_trend_dir_fails_on_empty_current_dir(tmp_path, capsys):
+    cur, prev = _dirs(tmp_path)
+    rc = _trend(str(cur), str(prev))
+    assert rc == 1
+    assert "no BENCH_*.json artifacts" in capsys.readouterr().err
+
+
+def test_trend_dir_fails_on_own_corrupt_artifact(tmp_path):
+    cur, prev = _dirs(tmp_path)
+    (cur / "BENCH_scaling.json").write_text('{"rows": [torn')
+    with pytest.raises(ValueError):
+        _trend(str(cur), str(prev))
+
+
+# ---------------------------------------------------------------------------
+# dynamic gate
+# ---------------------------------------------------------------------------
+
+def _dynamic_rows(*, frac_edges=(100, 1000), bitwise=1, allclose=1,
+                  det_bitwise=1, after=1, roundtrip=1):
+    inc, rec = frac_edges
+    return [
+        {"name": "dynamic/stream_incremental", "us_per_call": 10.0,
+         "stats": {"edges_touched": inc, "bitwise_equal": bitwise,
+                   "work_frac": inc / rec, "batches": 6, "inserts": 50}},
+        {"name": "dynamic/stream_recompute", "us_per_call": 50.0,
+         "stats": {"edges_touched": rec, "batches": 6}},
+        {"name": "dynamic/pr_incremental", "us_per_call": 30.0,
+         "stats": {"allclose": allclose, "det_bitwise": det_bitwise,
+                   "edges_touched": 500}},
+        {"name": "dynamic/compact", "us_per_call": 5.0,
+         "stats": {"bitwise_after_compact": after,
+                   "roundtrip_equal": roundtrip, "budget_ratio": 4.0}},
+    ]
+
+
+def _dynamic(bench, max_work_frac=0.5):
+    return ci_gate.cmd_dynamic(
+        argparse.Namespace(bench=bench, max_work_frac=max_work_frac))
+
+
+def test_dynamic_gate_passes(tmp_path, capsys):
+    bench = _bench(tmp_path, "BENCH_dynamic.json", _dynamic_rows())
+    rc = _dynamic(bench)
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "dynamic delta gate" in out
+
+
+def test_dynamic_gate_fails_on_work_fraction(tmp_path, capsys):
+    bench = _bench(tmp_path, "BENCH_dynamic.json",
+                   _dynamic_rows(frac_edges=(900, 1000)))
+    rc = _dynamic(bench)
+    err = capsys.readouterr().err
+    assert rc == 1
+    assert "DYNAMIC GATE FAILED" in err
+
+
+@pytest.mark.parametrize("kw", [{"bitwise": 0}, {"allclose": 0},
+                                {"det_bitwise": 0}, {"after": 0},
+                                {"roundtrip": 0}])
+def test_dynamic_gate_fails_on_unset_flags(tmp_path, capsys, kw):
+    bench = _bench(tmp_path, "BENCH_dynamic.json", _dynamic_rows(**kw))
+    assert _dynamic(bench) == 1
+    assert "DYNAMIC GATE FAILED" in capsys.readouterr().err
+
+
+def test_dynamic_gate_fails_on_missing_rows(tmp_path, capsys):
+    bench = _bench(tmp_path, "BENCH_dynamic.json", _dynamic_rows()[:1])
+    assert _dynamic(bench) == 1
+    assert "missing row" in capsys.readouterr().err

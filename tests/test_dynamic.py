@@ -1,0 +1,286 @@
+"""Dynamic edge-log layer: apply_batch semantics, fold order, incremental
+algorithms' equality contracts, compaction, and the v3 store."""
+
+import os
+import shutil
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (open_dynamic, open_graph, save_dynamic,
+                              save_graph)
+from repro.core import DynamicGraph, dynamize, from_coo, operators as ops
+from repro.core.algorithms import bfs, cc, pagerank as pr
+from repro.core.faultio import ShardCorruptError
+
+
+def _ring_graph(n=40, block_size=16, **kw):
+    src = np.arange(n)
+    dst = (src + 1) % n
+    return from_coo(src, dst, n, block_size=block_size, **kw)
+
+
+def _rand_edges(rng, n, m):
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    return src[keep], dst[keep]
+
+
+def _base_and_holdout(seed=0, n=60, m=240, holdout=40):
+    rng = np.random.default_rng(seed)
+    src, dst = _rand_edges(rng, n, m)
+    return (src[:-holdout], dst[:-holdout]), (src[-holdout:], dst[-holdout:]), n
+
+
+# ---------------------------------------------------------------------------
+# apply_batch semantics
+# ---------------------------------------------------------------------------
+
+def test_apply_batch_insert_if_absent():
+    g = _ring_graph(n=40)
+    dyn = dynamize(g, nshards=4)
+    m0 = dyn.m
+    # 0->1 exists in the base; (5,5) is a self-loop; (3,7) twice keeps one
+    delta = dyn.apply_batch([0, 5, 3, 3, 9], [1, 5, 7, 7, 2],
+                            [1.0, 1.0, 4.0, 2.0, 1.0])
+    assert delta.requested == 5
+    assert delta.inserted == 2               # (3,7) and (9,2)
+    assert dyn.m == m0 + 2
+    assert list(delta.dirty) == [3, 9]
+    # in-batch duplicate keeps the MIN weight (from_coo's dedup rule)
+    i = list(delta.src).index(3)
+    assert delta.w[i] == 2.0
+    # re-inserting is a no-op
+    again = dyn.apply_batch([3, 9], [7, 2])
+    assert again.inserted == 0 and dyn.m == m0 + 2
+
+
+def test_apply_batch_rejects_out_of_range():
+    dyn = dynamize(_ring_graph(n=40), nshards=4)
+    with pytest.raises(ValueError):
+        dyn.apply_batch([0], [40])
+    with pytest.raises(ValueError):
+        dyn.apply_batch([-1], [3])
+
+
+def test_apply_batch_symmetrize_and_out_deg():
+    dyn = dynamize(_ring_graph(n=40, symmetrize=True), nshards=4)
+    od0 = np.asarray(dyn.out_deg).copy()
+    delta = dyn.apply_batch([4], [20], symmetrize=True)
+    assert delta.inserted == 2
+    assert set(delta.dirty) == {4, 20}
+    od1 = np.asarray(dyn.out_deg)
+    assert od1[4] == od0[4] + 1 and od1[20] == od0[20] + 1
+    assert np.array_equal(delta.old_out_deg, od0)
+
+
+def test_apply_batch_permutation_invariant_logs():
+    (bs, bd), (hs, hd), n = _base_and_holdout()
+    perm = np.random.default_rng(3).permutation(hs.size)
+
+    def build(order):
+        dyn = dynamize(from_coo(bs, bd, n, block_size=16), nshards=4)
+        dyn.apply_batch(hs[order], hd[order])
+        return dyn
+
+    a, b = build(np.arange(hs.size)), build(perm)
+    for sa, sb in zip(a._log, b._log):
+        for xa, xb in zip(sa, sb):
+            assert np.array_equal(xa, xb)
+
+
+# ---------------------------------------------------------------------------
+# fold order / relax equality vs a rebuilt flat Graph
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("pool", [2, 4])
+def test_log_relax_matches_rebuilt_graph(pool):
+    (bs, bd), (hs, hd), n = _base_and_holdout(seed=1)
+    dyn = dynamize(from_coo(bs, bd, n, block_size=16), nshards=4,
+                   resident_shards=pool)
+    delta = dyn.apply_batch(hs, hd)
+    # rebuild a flat Graph holding base + ACCEPTED delta edges only
+    g2 = from_coo(np.concatenate([bs, delta.src]),
+                  np.concatenate([bd, delta.dst]), n, block_size=16)
+    assert g2.m == dyn.m
+    d_dyn, _ = bfs.bfs_dd_sparse(dyn, 0)
+    d_flat, _ = bfs.bfs_dd_sparse(g2, 0)
+    assert bool(jnp.all(d_dyn == d_flat))
+
+
+def test_log_only_shard_counts_live():
+    # a vertex with NO base out-edges gains a log edge: round_live must
+    # schedule its shard (dynamic out_deg), or the insert never relaxes
+    n = 40
+    src = np.arange(0, 20)        # only low vertices have base edges
+    dst = (src + 1) % 20
+    dyn = dynamize(from_coo(src, dst, n, block_size=8), nshards=4)
+    assert int(np.asarray(dyn.base.out_deg)[30]) == 0
+    dyn.apply_batch([19, 30], [30, 35])   # 35 reachable only through 30
+    d, _ = bfs.bfs_dd_sparse(dyn, 0)
+    assert float(d[30]) == 20.0 and float(d[35]) == 21.0
+
+
+# ---------------------------------------------------------------------------
+# incremental BFS / CC: bitwise per batch and across compaction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("substrate", ["jnp", "pallas"])
+def test_bfs_cc_incremental_bitwise(substrate):
+    (bs, bd), (hs, hd), n = _base_and_holdout(seed=2)
+    with ops.substrate_scope(substrate):
+        dyn = dynamize(from_coo(bs, bd, n, block_size=16, symmetrize=True),
+                       nshards=4, resident_shards=2)
+        dist, _ = bfs.bfs_dd_sparse(dyn, 0)
+        lab, _ = cc.cc_dd_sparse(dyn)
+        for k in range(0, hs.size, 10):
+            delta = dyn.apply_batch(hs[k:k + 10], hd[k:k + 10],
+                                    symmetrize=True)
+            dist, _ = bfs.bfs_incremental(dyn, dist, delta)
+            lab, _ = cc.cc_incremental(dyn, lab, delta)
+            d_scr, _ = bfs.bfs_dd_sparse(dyn, 0)
+            l_scr, _ = cc.cc_dd_sparse(dyn)
+            assert bool(jnp.all(dist == d_scr))
+            assert bool(jnp.all(lab == l_scr))
+        dyn.compact()
+        assert dyn.log_sizes == [0] * dyn.nshards
+        d_post, _ = bfs.bfs_dd_sparse(dyn, 0)
+        l_post, _ = cc.cc_dd_sparse(dyn)
+        assert bool(jnp.all(dist == d_post))
+        assert bool(jnp.all(lab == l_post))
+
+
+def test_incremental_touches_fewer_edges():
+    (bs, bd), (hs, hd), n = _base_and_holdout(seed=4, m=400, holdout=10)
+    dyn = dynamize(from_coo(bs, bd, n, block_size=16, symmetrize=True),
+                   nshards=4)
+    dist, _ = bfs.bfs_dd_sparse(dyn, 0)
+    delta = dyn.apply_batch(hs, hd, symmetrize=True)
+    _, inc = bfs.bfs_incremental(dyn, dist, delta)
+    _, scr = bfs.bfs_dd_sparse(dyn, 0)
+    assert inc.edges_touched < scr.edges_touched
+
+
+# ---------------------------------------------------------------------------
+# incremental pagerank: allclose to scratch, bitwise-reproducible replays
+# ---------------------------------------------------------------------------
+
+def _pr_replay(bs, bd, n, hs, hd, *, pool, fused=True, substrate="jnp"):
+    with ops.substrate_scope(substrate), ops.deterministic_add_scope(True):
+        dyn = dynamize(from_coo(bs, bd, n, block_size=16), nshards=4,
+                       resident_shards=pool)
+        _, _, state = pr.pr_incremental(dyn, tol=1e-7)
+        for k in range(0, hs.size, 20):
+            delta = dyn.apply_batch(hs[k:k + 20], hd[k:k + 20])
+            _, _, state = pr.pr_incremental(dyn, delta, state, tol=1e-7)
+        return dyn, state
+
+
+def test_pr_incremental_allclose_and_det_reproducible():
+    (bs, bd), (hs, hd), n = _base_and_holdout(seed=5)
+    dyn, state = _pr_replay(bs, bd, n, hs, hd, pool=4)
+    with ops.deterministic_add_scope(True):
+        rank, _, _ = pr.pr_incremental(dyn, state=state, tol=1e-7)
+        scratch, _ = pr.pr_push(dyn, tol=1e-7)
+    assert bool(jnp.allclose(rank, scratch, rtol=1e-3, atol=1e-6))
+    # identical replay under a different pool size: bitwise-equal state
+    dyn2, state2 = _pr_replay(bs, bd, n, hs, hd, pool=2)
+    assert bool(jnp.all(state.rank == state2.rank))
+    assert bool(jnp.all(state.resid == state2.resid))
+
+
+def test_pr_cold_bitwise_across_pool_and_substrate():
+    (bs, bd), (hs, hd), n = _base_and_holdout(seed=6)
+    ranks = []
+    for pool, substrate in [(2, "jnp"), (4, "jnp"), (4, "pallas")]:
+        with ops.substrate_scope(substrate), ops.deterministic_add_scope(True):
+            dyn = dynamize(from_coo(bs, bd, n, block_size=16), nshards=4,
+                           resident_shards=pool)
+            dyn.apply_batch(hs, hd)
+            rank, _, _ = pr.pr_incremental(dyn, tol=1e-7)
+        ranks.append(np.asarray(rank))
+    assert all(np.array_equal(ranks[0], r) for r in ranks[1:])
+
+
+# ---------------------------------------------------------------------------
+# v3 store
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def store(tmp_path):
+    return str(tmp_path / "store")
+
+
+def test_store_roundtrip(store):
+    (bs, bd), (hs, hd), n = _base_and_holdout(seed=7)
+    save_graph(from_coo(bs, bd, n, block_size=16), store, nshards=4)
+    dyn = open_dynamic(store, resident_shards=2)   # v2 opens, empty logs
+    assert isinstance(dyn, DynamicGraph) and dyn.log_sizes == [0, 0, 0, 0]
+    dyn.apply_batch(hs, hd)
+    save_dynamic(dyn, store)
+    dyn2 = open_dynamic(store, resident_shards=2)
+    assert dyn2.m == dyn.m
+    for a, b in zip(dyn._log, dyn2._log):
+        for xa, xb in zip(a, b):
+            assert np.array_equal(xa, xb)
+    d1, _ = bfs.bfs_dd_sparse(dyn, 0)
+    d2, _ = bfs.bfs_dd_sparse(dyn2, 0)
+    assert bool(jnp.all(d1 == d2))
+
+
+def test_open_graph_refuses_pending_logs(store):
+    (bs, bd), (hs, hd), n = _base_and_holdout(seed=8)
+    save_graph(from_coo(bs, bd, n, block_size=16), store, nshards=4)
+    dyn = open_dynamic(store)
+    dyn.apply_batch(hs, hd)
+    save_dynamic(dyn, store)
+    with pytest.raises(ValueError, match="pending edge-log deltas"):
+        open_graph(store)
+    # after compaction the logs drain and the plain open works again
+    dyn.compact()
+    save_dynamic(dyn, store)
+    assert open_graph(store).m == dyn.m
+
+
+def test_save_dynamic_reuses_base_shards(store):
+    (bs, bd), (hs, hd), n = _base_and_holdout(seed=9)
+    dyn = dynamize(from_coo(bs, bd, n, block_size=16), nshards=4,
+                   resident_shards=2)
+    save_dynamic(dyn, store)
+    mt0 = [os.path.getmtime(os.path.join(store, f))
+           for f in sorted(os.listdir(store)) if f.startswith("shard_")]
+    dyn.apply_batch(hs, hd)
+    save_dynamic(dyn, store)   # incremental flush: base files untouched
+    mt1 = [os.path.getmtime(os.path.join(store, f))
+           for f in sorted(os.listdir(store)) if f.startswith("shard_")]
+    assert mt0 == mt1
+    assert open_dynamic(store).m == dyn.m
+
+
+def test_corrupt_log_refused(store):
+    (bs, bd), (hs, hd), n = _base_and_holdout(seed=10)
+    dyn = dynamize(from_coo(bs, bd, n, block_size=16), nshards=4,
+                   resident_shards=2)
+    dyn.apply_batch(hs, hd)
+    save_dynamic(dyn, store)
+    logf = next(os.path.join(store, f) for f in sorted(os.listdir(store))
+                if f.startswith("log_"))
+    data = dict(np.load(logf))
+    data["w"] = data["w"] + 1.0
+    with open(logf, "wb") as f:
+        np.savez(f, **data)
+    with pytest.raises(ShardCorruptError, match="log shard"):
+        open_dynamic(store)
+    assert open_dynamic(store, verify="off").m == dyn.m  # trusted open
+
+
+def test_pull_requires_compaction():
+    dyn = dynamize(_ring_graph(n=40, build_csc=True), nshards=4)
+    dyn.apply_batch([0], [5])
+    assert not dyn.has_csc
+    with pytest.raises(NotImplementedError):
+        dyn.tiered_pull_dense(jnp.zeros(dyn.n_pad), None, None, "min", True,
+                              "jnp")

@@ -1,0 +1,112 @@
+"""Property-based tests (hypothesis) for the dynamic delta contract: for
+ANY graph × update-batch sequence × shard cut × pool size × substrate,
+incremental BFS/CC are bitwise equal to from-scratch recompute after every
+batch and after compaction at any point, and incremental pagerank replays
+bitwise under deterministic add."""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+pytest.importorskip("hypothesis", reason="property tests need hypothesis "
+                    "(pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import dynamize, from_coo
+from repro.core import operators as ops
+from repro.core.algorithms import bfs, cc, pagerank
+
+
+edge_list = st.lists(st.tuples(st.integers(0, 39), st.integers(0, 39)),
+                     min_size=1, max_size=80)
+batch_list = st.lists(
+    st.lists(st.tuples(st.integers(0, 39), st.integers(0, 39)),
+             min_size=1, max_size=20),
+    min_size=1, max_size=3)
+
+
+def _coo(edges, n, rng):
+    src = np.array([e[0] % n for e in edges], np.int64)
+    dst = np.array([e[1] % n for e in edges], np.int64)
+    w = rng.uniform(1, 3, len(src)).astype(np.float32)
+    return src, dst, w
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=st.integers(8, 40), base=edge_list, batches=batch_list,
+       seed=st.integers(0, 2**31 - 1), nshards=st.integers(2, 5),
+       pool=st.integers(2, 5), compact_at=st.integers(0, 3),
+       substrate=st.sampled_from(["jnp", "pallas"]), src0=st.integers(0, 39))
+def test_incremental_bfs_cc_bitwise(n, base, batches, seed, nshards, pool,
+                                    compact_at, substrate, src0):
+    """Incremental BFS (weighted min relax) and CC labels equal the
+    from-scratch run bitwise after EVERY batch, with a compaction injected
+    at an arbitrary point in the stream."""
+    rng = np.random.default_rng(seed)
+    bs, bd, bw = _coo(base, n, rng)
+    src0 = src0 % n
+    with ops.substrate_scope(substrate):
+        dyn = dynamize(from_coo(bs, bd, n, bw, block_size=16,
+                                symmetrize=True),
+                       nshards=nshards, resident_shards=pool)
+        dist, _ = bfs.bfs_dd_sparse(dyn, src0)
+        lab, _ = cc.cc_dd_sparse(dyn)
+        for i, batch in enumerate(batches):
+            if i == compact_at:
+                dyn.compact()
+            s, d, w = _coo(batch, n, rng)
+            delta = dyn.apply_batch(s, d, w, symmetrize=True)
+            dist, _ = bfs.bfs_incremental(dyn, dist, delta)
+            lab, _ = cc.cc_incremental(dyn, lab, delta)
+            d_scr, _ = bfs.bfs_dd_sparse(dyn, src0)
+            l_scr, _ = cc.cc_dd_sparse(dyn)
+            np.testing.assert_array_equal(np.asarray(dist), np.asarray(d_scr))
+            np.testing.assert_array_equal(np.asarray(lab), np.asarray(l_scr))
+        dyn.compact()
+        d_post, _ = bfs.bfs_dd_sparse(dyn, src0)
+        l_post, _ = cc.cc_dd_sparse(dyn)
+        np.testing.assert_array_equal(np.asarray(dist), np.asarray(d_post))
+        np.testing.assert_array_equal(np.asarray(lab), np.asarray(l_post))
+
+
+@settings(max_examples=10, deadline=None)
+@given(n=st.integers(8, 30), base=edge_list, batches=batch_list,
+       seed=st.integers(0, 2**31 - 1), nshards=st.integers(2, 4),
+       pools=st.tuples(st.integers(2, 4), st.integers(2, 4)))
+def test_incremental_pagerank_det_add_invariant(n, base, batches, seed,
+                                                nshards, pools):
+    """Under deterministic add, replaying the SAME batch sequence through
+    pr_incremental must yield bitwise-identical state chains for ANY pool
+    size (the shard cut is held fixed — it is part of the deterministic
+    fold order, like sharded.py's partition-order note), and the final
+    warm rank must land allclose to a from-scratch solve."""
+    rng = np.random.default_rng(seed)
+    bs, bd, bw = _coo(base, n, rng)
+    batch_arrays = [_coo(b, n, np.random.default_rng(seed + 1 + i))
+                    for i, b in enumerate(batches)]
+
+    def replay(pool):
+        with ops.deterministic_add_scope(True):
+            dyn = dynamize(from_coo(bs, bd, n, bw, block_size=16),
+                           nshards=nshards, resident_shards=pool)
+            _, _, state = pagerank.pr_incremental(dyn, tol=1e-6,
+                                                  max_iters=500)
+            for s, d, w in batch_arrays:
+                delta = dyn.apply_batch(s, d, w)
+                _, _, state = pagerank.pr_incremental(dyn, delta, state,
+                                                      tol=1e-6,
+                                                      max_iters=500)
+            rank, _, _ = pagerank.pr_incremental(dyn, state=state, tol=1e-6,
+                                                 max_iters=500)
+        return np.asarray(state.rank), np.asarray(state.resid), \
+            np.asarray(rank), dyn
+
+    ra, rsa, na, dyn = replay(pools[0])
+    rb, rsb, nb, _ = replay(pools[1])
+    np.testing.assert_array_equal(ra, rb)
+    np.testing.assert_array_equal(rsa, rsb)
+    np.testing.assert_array_equal(na, nb)
+    # and the warm chain lands allclose to a from-scratch solve
+    with ops.deterministic_add_scope(True):
+        scratch, _ = pagerank.pr_push(dyn, tol=1e-6, max_iters=500)
+    assert bool(jnp.allclose(jnp.asarray(na), scratch, rtol=1e-3, atol=1e-5))
